@@ -1,0 +1,263 @@
+"""Analytic FLOP / HBM-byte model per (arch x shape), from the configs.
+
+Why this exists: XLA's HloCostAnalysis counts a while-loop body ONCE, so for
+scan-over-layers programs the compiled `cost_analysis()` under-reports
+flops/bytes by ~L_layers (verified; see sharding/hlo_loops.py which fixes
+the collective side by parsing trip counts).  The compute and memory
+roofline terms therefore come from this analytic model; the HLO-derived
+values are reported alongside as "as-compiled" evidence.
+
+Conventions:
+  * FLOPs are global per step; divide by chip count for the per-chip term.
+  * 1 MAC = 2 FLOPs.
+  * causal attention scores cost S_kv_eff = S/2 per query (train/prefill).
+  * train multiplier = 4x forward (1 fwd + 2 bwd + 1 remat re-fwd).
+  * HBM bytes are per device: weight traffic uses the TP-sharded size; the
+    activation traffic model is `ACT_RW` bf16 touches of the (token, d)
+    residual per layer — coarse but uniform across archs, so relative
+    comparisons and hillclimb deltas are meaningful.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import INPUT_SHAPES, ArchConfig, InputShape, get_arch
+
+BYTES_BF16 = 2
+ACT_RW = 16  # bf16 touches of the residual stream per layer (fwd)
+TRAIN_FLOP_MULT = 4.0  # fwd + bwd(2x) + remat re-fwd
+TRAIN_ACT_MULT = 2.5  # fwd writes + bwd reads + remat traffic
+
+
+# ---------------------------------------------------------------------------
+# parameter accounting (total and TP-shard sizes)
+# ---------------------------------------------------------------------------
+
+def param_counts(cfg: ArchConfig) -> dict:
+    """{"total": n, "experts": n_expert_params} parameter counts."""
+    d, L, V = cfg.d_model, cfg.num_layers, cfg.vocab_size
+    hd = cfg.resolved_head_dim()
+    n = V * d * (1 if cfg.tie_embeddings else 2)
+    experts = 0
+
+    def attn_params():
+        return d * cfg.num_heads * hd + 2 * d * cfg.num_kv_heads * hd \
+            + cfg.num_heads * hd * d
+
+    def mamba_params(dm):
+        ssm = cfg.ssm
+        di = ssm.d_inner(dm)
+        return dm * (2 * di + 2 * ssm.n_groups * ssm.d_state + ssm.n_heads(dm)) \
+            + di * dm + ssm.conv_width * (di + 2 * ssm.n_groups * ssm.d_state)
+
+    if cfg.family in ("dense", "vlm"):
+        n += L * (attn_params() + 3 * d * cfg.d_ff)
+    elif cfg.family == "audio":
+        e = cfg.encdec.encoder_layers
+        n += e * (attn_params() + 2 * d * cfg.d_ff)
+        n += L * (2 * attn_params() + 2 * d * cfg.d_ff)  # self + cross
+    elif cfg.family == "moe":
+        m = cfg.moe
+        experts = L * 3 * m.num_experts * d * cfg.d_ff
+        n += L * (attn_params() + d * m.num_experts) + experts
+        if m.num_shared_experts:
+            n += L * 3 * d * cfg.d_ff * m.num_shared_experts
+        if m.dense_residual:
+            n += L * 3 * d * m.d_ff_dense_residual
+    elif cfg.family == "ssm":
+        n += L * mamba_params(d)
+    elif cfg.family == "hybrid":
+        n += L * mamba_params(d)
+        n += attn_params() + 3 * d * cfg.d_ff  # one shared attn block
+    if cfg.vertical is not None and cfg.family != "vlm":
+        v = cfg.vertical
+        K, Lt = v.num_clients, v.tower_layers
+        d_sl = d // K
+        if cfg.family in ("ssm", "hybrid"):
+            d_t = d_sl
+            per_layer = mamba_params(d_t)
+        else:
+            heads_t = max(1, cfg.num_heads // K)
+            d_t = heads_t * hd
+            per_layer = (d_t * heads_t * hd * 2
+                         + 2 * d_t * max(1, cfg.num_kv_heads // K) * hd
+                         + 3 * d_t * max(hd, cfg.d_ff // K))
+        cut = d // K if v.merge == "concat" else d
+        n += K * (d_sl * d_t + Lt * per_layer + d_t * cut)
+    return {"total": n, "experts": experts}
+
+
+# ---------------------------------------------------------------------------
+# FLOPs (global, forward; caller applies the train multiplier)
+# ---------------------------------------------------------------------------
+
+def _attn_flops(T, S_kv_eff, cfg, dims_scale=1.0):
+    d = int(cfg.d_model * dims_scale) or cfg.d_model
+    hd = cfg.resolved_head_dim()
+    H = max(1, int(cfg.num_heads * dims_scale))
+    Kv = max(1, int(cfg.num_kv_heads * dims_scale)) if cfg.num_kv_heads else 0
+    proj = 2 * T * d * (H + 2 * Kv) * hd + 2 * T * H * hd * d
+    scores = 4 * T * S_kv_eff * H * hd
+    return proj + scores
+
+
+def _mamba_flops(T, cfg, d):
+    ssm = cfg.ssm
+    di, N, P = ssm.d_inner(d), ssm.d_state, ssm.head_dim
+    H = ssm.n_heads(d)
+    Q = ssm.chunk_size
+    proj = 2 * T * d * (2 * di + 2 * ssm.n_groups * N + H) + 2 * T * di * d
+    conv = 2 * T * ssm.conv_width * (di + 2 * ssm.n_groups * N)
+    # SSD per token per head: scores Q*N + mask Q + y Q*P + state 2*N*P
+    ssd = 2 * T * H * (Q * N + Q + Q * P + 2 * N * P)
+    return proj + conv + ssd
+
+
+def forward_flops(cfg: ArchConfig, shape: InputShape) -> float:
+    B, S = shape.global_batch, shape.seq_len
+    d, V = cfg.d_model, cfg.vocab_size
+    is_decode = shape.is_decode
+    T = B if is_decode else B * S  # tokens processed this step
+
+    if is_decode:
+        cache_len = min(cfg.sliding_window, S) if S > 65536 else S
+        S_kv = cache_len
+    else:
+        S_kv = S / 2  # causal average
+
+    total = 2 * T * d * V  # unembed
+
+    n_server = cfg.num_layers
+    if cfg.vertical is not None and cfg.family != "vlm":
+        n_server -= cfg.vertical.tower_layers
+
+    if cfg.family in ("dense", "vlm"):
+        Sv = cfg.vlm.num_vision_tokens if cfg.family == "vlm" else 0
+        Teff = T if is_decode else T + B * Sv * 0  # vision tokens included in S
+        per_layer = _attn_flops(Teff, S_kv, cfg) + 6 * Teff * d * cfg.d_ff
+        total += n_server * per_layer
+    elif cfg.family == "moe":
+        m = cfg.moe
+        attn = _attn_flops(T, S_kv, cfg)
+        ffn = 6 * T * m.top_k * d * cfg.d_ff + 2 * T * d * m.num_experts
+        if m.num_shared_experts:
+            ffn += 6 * T * d * cfg.d_ff * m.num_shared_experts
+        if m.dense_residual:
+            ffn += 6 * T * d * m.d_ff_dense_residual
+        # dispatch/combine einsums ~ 3 x (T * k * cf * Sg * d) MACs
+        Sg = min(512, max(1, T // max(B, 1)))
+        ffn += 3 * 2 * T * m.top_k * m.capacity_factor * Sg * d
+        total += n_server * (attn + ffn)
+    elif cfg.family == "ssm":
+        total += n_server * _mamba_flops(T, cfg, d)
+    elif cfg.family == "hybrid":
+        total += n_server * _mamba_flops(T, cfg, d)
+        n_attn = n_server // cfg.hybrid.shared_attn_every
+        total += n_attn * (_attn_flops(T, S_kv, cfg) + 6 * T * d * cfg.d_ff)
+    elif cfg.family == "audio":
+        S_enc = cfg.encdec.encoder_seq_len
+        T_enc = B * S_enc
+        enc_layers = cfg.encdec.encoder_layers
+        if cfg.vertical is not None:
+            enc_layers -= cfg.vertical.tower_layers
+        enc = enc_layers * (_attn_flops(T_enc, S_enc, cfg) + 4 * T_enc * d * cfg.d_ff)
+        dec_self = _attn_flops(T, S_kv, cfg)
+        dec_cross = _attn_flops(T, S_enc, cfg)
+        dec = cfg.num_layers * (dec_self + dec_cross + 4 * T * d * cfg.d_ff)
+        if is_decode:
+            total += dec  # encoder ran at prefill
+        else:
+            total += enc + dec
+
+    # vertical towers (feature-slice families)
+    if cfg.vertical is not None and cfg.family != "vlm":
+        v = cfg.vertical
+        K, Lt = v.num_clients, v.tower_layers
+        T_t = B * cfg.encdec.encoder_seq_len if cfg.family == "audio" else T
+        if cfg.family == "audio" and is_decode:
+            T_t = 0
+        if cfg.family in ("ssm", "hybrid"):
+            d_t = d // K
+            per = _mamba_flops(T_t, cfg, d_t)
+        else:
+            hd = cfg.resolved_head_dim()
+            heads_t = max(1, cfg.num_heads // K)
+            d_t = heads_t * hd
+            scale = heads_t / max(cfg.num_heads, 1)
+            per = _attn_flops(T_t, S_kv, cfg, dims_scale=scale) \
+                + 6 * T_t * d_t * max(hd, cfg.d_ff // K)
+        cut = d // K if v.merge == "concat" else d
+        proj = 2 * T_t * (d // K) * d_t + 2 * T_t * d_t * cut
+        total += K * (Lt * per + proj)
+    return float(total)
+
+
+def step_flops(cfg: ArchConfig, shape: InputShape) -> float:
+    f = forward_flops(cfg, shape)
+    return f * TRAIN_FLOP_MULT if shape.kind == "train" else f
+
+
+# ---------------------------------------------------------------------------
+# HBM bytes (per device, per step)
+# ---------------------------------------------------------------------------
+
+def step_hbm_bytes(cfg: ArchConfig, shape: InputShape, *, chips: int,
+                   tp: int = 16, kv_shards: int = 1,
+                   kv_quant: bool = False) -> float:
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    dp = max(chips // tp, 1)
+    counts = param_counts(cfg)
+    p_shard = counts["total"] / tp * BYTES_BF16  # TP-sharded bf16 weights
+
+    is_decode = shape.is_decode
+    T_dev = (B / min(B, dp)) if is_decode else B * S / chips * tp / tp
+    if not is_decode:
+        T_dev = B * S / min(B * S, dp)  # batch sharded over dp only
+
+    L = cfg.num_layers
+    act = T_dev * d * BYTES_BF16 * ACT_RW * L
+
+    if shape.kind == "train":
+        # weights fwd + bwd + remat re-read; grads w+r; f32 opt states (ZeRO
+        # over dp): read mu,nu + param, write mu,nu,param
+        weights = 3 * p_shard + 2 * p_shard
+        opt = 6 * counts["total"] * 4 / (tp * dp)
+        return float(weights + opt + act * TRAIN_ACT_MULT)
+    if shape.kind == "prefill":
+        return float(p_shard + act)
+
+    # decode: weights once + full KV/state sweep + small activations
+    cache_len = min(cfg.sliding_window, S) if S > 65536 else S
+    hd = cfg.resolved_head_dim()
+    kv_bytes = 0.0
+    if cfg.family in ("dense", "vlm", "moe", "audio"):
+        B_dev = B / min(B, dp)
+        kv_bytes = 2 * L * B_dev * cache_len * cfg.num_kv_heads * hd * BYTES_BF16
+    elif cfg.family == "hybrid":
+        ssm = cfg.ssm
+        B_dev = B / min(B, dp)
+        n_attn = L // cfg.hybrid.shared_attn_every
+        kv_bytes = 2 * n_attn * B_dev * cache_len * cfg.num_kv_heads * hd * BYTES_BF16
+        kv_bytes += 2 * L * B_dev * ssm.n_heads(d) * ssm.head_dim * ssm.d_state * 4
+    else:  # ssm
+        ssm = cfg.ssm
+        B_dev = B / min(B, dp)
+        kv_bytes = 2 * L * B_dev * ssm.n_heads(d) * ssm.head_dim * ssm.d_state * 4
+    act_dec = (B / min(B, dp)) * d * BYTES_BF16 * ACT_RW * L
+    # flash-decoding: KV sequence sharded over the model axis
+    kv_bytes /= max(kv_shards, 1)
+    if kv_quant:
+        # int8 payload + f32 scale per (slot, head): ~0.53x of bf16
+        kv_bytes *= (1.0 + 4.0 / cfg.resolved_head_dim()) / 2.0
+    return float(p_shard + kv_bytes + act_dec)
+
+
+def describe(arch: str, shape_name: str, chips: int = 256) -> dict:
+    cfg = get_arch(arch)
+    shape = INPUT_SHAPES[shape_name]
+    return {
+        "flops_global": step_flops(cfg, shape),
+        "hbm_bytes_per_chip": step_hbm_bytes(cfg, shape, chips=chips),
+        "params": param_counts(cfg)["total"],
+    }

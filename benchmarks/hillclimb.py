@@ -1,0 +1,75 @@
+"""§Perf hillclimb driver: runs the three chosen (arch x shape) pairs through
+their candidate changes, one dry-run subprocess per variant (XLA device-count
+flags must be set before jax initializes), appending to hillclimb.json.
+
+Pairs (chosen from the §Roofline baseline table):
+  A. smollm-360m x train_4k   — most representative of the paper's technique
+     (vertical towers on the assigned llama-small); iterates the merge
+     collective + the client-factored mesh (paper-faithful isolation).
+  B. qwen3-32b   x train_4k   — most collective-bound big-dense pair;
+     iterates TP -> FSDP sharding.
+  C. qwen3-32b   x decode_32k — worst memory-roofline fraction; KV cache
+     does not even fit per-chip HBM under the baseline layout; iterates the
+     flash-decoding (seq-sharded KV + chunked LSE-combined attention) layout.
+
+Usage: PYTHONPATH=src python -m benchmarks.hillclimb [--json hillclimb.json]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+VARIANTS = [
+    # --- pair A: the paper's technique --------------------------------------
+    ("A0-baseline-flat-avg", ["--arch", "smollm-360m", "--shape", "train_4k",
+                              "--tag", "A0-baseline-flat-avg"]),
+    ("A1-centralized", ["--arch", "smollm-360m", "--shape", "train_4k",
+                        "--vertical", "off", "--tag", "A1-centralized"]),
+    ("A2-client-mesh-avg", ["--arch", "smollm-360m", "--shape", "train_4k",
+                            "--vertical-mode", "client",
+                            "--tag", "A2-client-mesh-avg"]),
+    ("A3-client-mesh-concat", ["--arch", "smollm-360m", "--shape", "train_4k",
+                               "--vertical-mode", "client", "--merge", "concat",
+                               "--tag", "A3-client-mesh-concat"]),
+    ("A4-flat-concat", ["--arch", "smollm-360m", "--shape", "train_4k",
+                        "--merge", "concat", "--tag", "A4-flat-concat"]),
+    # --- pair B: collective-bound dense train -------------------------------
+    ("B0-baseline-tp", ["--arch", "qwen3-32b", "--shape", "train_4k",
+                        "--tag", "B0-baseline-tp"]),
+    ("B1-fsdp", ["--arch", "qwen3-32b", "--shape", "train_4k", "--fsdp",
+                 "--tag", "B1-fsdp"]),
+    # --- pair C: memory-bound decode ----------------------------------------
+    ("C0-baseline-decode", ["--arch", "qwen3-32b", "--shape", "decode_32k",
+                            "--tag", "C0-baseline-decode"]),
+    ("C1-flash-decode-seq16", ["--arch", "qwen3-32b", "--shape", "decode_32k",
+                               "--shard-kv-seq", "--decode-chunks", "16",
+                               "--tag", "C1-flash-decode-seq16"]),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="hillclimb.json")
+    ap.add_argument("--only", default=None, help="substring filter on tags")
+    args = ap.parse_args(argv)
+
+    env = dict(os.environ)
+    env.setdefault("PYTHONPATH", "src")
+    failures = []
+    for tag, flags in VARIANTS:
+        if args.only and args.only not in tag:
+            continue
+        print(f"\n### {tag}")
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               *flags, "--json", args.json]
+        res = subprocess.run(cmd, env=env)
+        if res.returncode != 0:
+            failures.append(tag)
+    print(f"\nhillclimb done; {len(failures)} failures: {failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

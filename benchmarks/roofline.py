@@ -1,0 +1,133 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh).
+
+  compute    = analytic_FLOPs_global / chips / peak_FLOP/s   (197 TF bf16, v5e)
+  memory     = analytic_HBM_bytes_per_chip / HBM_bw          (819 GB/s)
+  collective = loop-corrected HLO collective bytes / ICI_bw  (~50 GB/s/link)
+
+Methodology (see EXPERIMENTS.md §Roofline for the full discussion):
+  * XLA's HloCostAnalysis counts while-loop (scan-over-layers) bodies ONCE,
+    so `cost_analysis()` under-reports by ~L; the compute/memory terms use
+    the analytic model in benchmarks/analytic.py, and the raw as-compiled
+    values are kept in the table for reference ("hlo_*" columns).
+  * Collective bytes come from the per-device HLO with while-loop trip
+    counts parsed and applied (repro.sharding.hlo_loops) — structural truth
+    from the actual compiled program.
+  * MODEL_FLOPS = 6*N*D (train, dense) / 6*N_active*D (train, MoE) /
+    2*N(_active)*D (inference); useful_ratio = MODEL_FLOPS / analytic FLOPs
+    — the gap is attention quadratic work, MoE dispatch, remat recompute.
+"""
+from __future__ import annotations
+
+import json
+
+from benchmarks.analytic import param_counts, step_flops, step_hbm_bytes
+from repro.configs.base import INPUT_SHAPES, ArchConfig, get_arch
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def active_params(cfg: ArchConfig) -> int:
+    """Per-token active params (= total minus inactive experts)."""
+    counts = param_counts(cfg)
+    n = counts["total"]
+    if cfg.moe is not None:
+        m = cfg.moe
+        active_expert = cfg.num_layers * 3 * m.top_k * cfg.d_model * cfg.d_ff
+        n = n - counts["experts"] + active_expert
+    return int(n)
+
+
+def model_flops(cfg: ArchConfig, shape_name: str) -> float:
+    shape = INPUT_SHAPES[shape_name]
+    n_act = active_params(cfg)
+    if shape.kind == "train":
+        return 6.0 * n_act * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_act * shape.global_batch * shape.seq_len
+    return 2.0 * n_act * shape.global_batch
+
+
+def roofline_row(rec: dict) -> dict:
+    cfg = get_arch(rec["arch"])
+    if rec.get("vertical") == "off":
+        cfg = cfg.with_vertical(None)
+    shape = INPUT_SHAPES[rec["shape"]]
+    chips = rec["devices"]
+
+    flops_global = step_flops(cfg, shape)
+    kv_shards = 16 if (rec.get("shard_seq_over_model")
+                       or rec.get("decode_chunks")) else 1
+    hbm_per_chip = step_hbm_bytes(cfg, shape, chips=chips,
+                                  kv_shards=kv_shards,
+                                  kv_quant=bool(rec.get("kv_quant")))
+    coll_bytes = rec.get("collective_wire_bytes",
+                         rec.get("collective_bytes_corrected",
+                                 rec.get("collective_bytes", 0)))
+
+    t_compute = flops_global / chips / PEAK_FLOPS_BF16
+    t_memory = hbm_per_chip / HBM_BW
+    t_coll = coll_bytes / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, rec["shape"])
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "multi_pod": rec.get("multi_pod", False),
+        "vertical": rec.get("vertical", "on"),
+        "vertical_mode": rec.get("vertical_mode", "flat"),
+        "tag": rec.get("tag", ""),
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": mf / flops_global if flops_global else 0.0,
+        "step_bound_s": max(terms.values()),
+        "hlo_flops_per_chip": rec.get("hlo_flops", 0.0),
+        "hlo_bytes_per_chip": rec.get("hlo_bytes", 0.0),
+        "collective_bytes": coll_bytes,
+        "collective_bytes_static": rec.get("collective_bytes", 0),
+    }
+
+
+def load_rows(paths: list[str]) -> list[dict]:
+    rows = []
+    for path in paths:
+        for rec in json.load(open(path)):
+            rows.append(roofline_row(rec))
+    return rows
+
+
+def to_markdown(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | pod | compute s | memory s | collective s | "
+           "dominant | useful ratio | bound s |")
+    sep = "|---" * 9 + "|"
+    out = [hdr, sep]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["multi_pod"])):
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {'2x' if r['multi_pod'] else '1x'} "
+            f"| {r['t_compute_s']:.2e} | {r['t_memory_s']:.2e} "
+            f"| {r['t_collective_s']:.2e} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.3f} | {r['step_bound_s']:.2e} |"
+        )
+    return "\n".join(out)
+
+
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("json_files", nargs="+")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args(argv)
+    rows = load_rows(args.json_files)
+    if args.markdown:
+        print(to_markdown(rows))
+    else:
+        for r in rows:
+            print(r)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

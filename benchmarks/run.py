@@ -1,0 +1,117 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows plus the table payloads.
+
+  PYTHONPATH=src python -m benchmarks.run            # quick mode (~2 min)
+  PYTHONPATH=src python -m benchmarks.run --full     # full tables (EXPERIMENTS.md)
+  PYTHONPATH=src python -m benchmarks.run --roofline dryrun_single.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def _emit(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}")
+
+
+def bench_kernels() -> None:
+    """Microbenchmarks of the kernel oracles (CPU host timings)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (4, 256, 1024))
+    for strategy in ("max", "avg", "sum", "mul"):
+        f = jax.jit(lambda t: ops.merge_pool(t, strategy=strategy))
+        f(x).block_until_ready()
+        t0 = time.time()
+        for _ in range(20):
+            out = f(x)
+        out.block_until_ready()
+        _emit(f"merge_pool/{strategy}", (time.time() - t0) / 20 * 1e6,
+              "K=4 B=256 D=1024")
+
+    q = jax.random.normal(key, (1, 4, 512, 64))
+    f = jax.jit(lambda a: ops.flash_attention(a, a, a, causal=True))
+    f(q).block_until_ready()
+    t0 = time.time()
+    for _ in range(5):
+        out = f(q)
+    out.block_until_ready()
+    _emit("flash_attention/ref", (time.time() - t0) / 5 * 1e6, "B1 H4 S512 D64")
+
+
+def run_paper_tables(steps: int, out: dict) -> None:
+    from benchmarks import paper_tables as pt
+
+    t0 = time.time()
+    out["table2"] = pt.table2_centralized_vs_split(steps=steps)
+    _emit("table2_centralized_vs_split", (time.time() - t0) * 1e6,
+          f"steps={steps}")
+    t0 = time.time()
+    out["table3"] = pt.table3_merging_strategies(steps=steps)
+    _emit("table3_merging_strategies", (time.time() - t0) * 1e6)
+    t0 = time.time()
+    out["table4"] = pt.table4_client_drops(steps=steps)
+    _emit("table4_client_drops", (time.time() - t0) * 1e6)
+    t0 = time.time()
+    out["table5"] = pt.table5_communication()
+    _emit("table5_communication", (time.time() - t0) * 1e6)
+    t0 = time.time()
+    out["table6"] = pt.table6_compute()
+    _emit("table6_compute", (time.time() - t0) * 1e6)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full-budget tables (used for EXPERIMENTS.md)")
+    ap.add_argument("--figures", action="store_true")
+    ap.add_argument("--roofline", nargs="*", default=None,
+                    help="dry-run json files to fold into the roofline table")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+    out: dict = {}
+    bench_kernels()
+    steps = 400 if args.full else 60
+    run_paper_tables(steps, out)
+    if args.figures:
+        from benchmarks import paper_tables as pt
+
+        out["figure2"] = pt.figure2_training_curves(steps=steps)
+    roofline_paths = args.roofline
+    if roofline_paths is None:
+        # default: fold in the dry-run matrices when present
+        import os
+
+        roofline_paths = [p for p in ("dryrun_single_v2.json",)
+                          if os.path.exists(p)]
+    if roofline_paths:
+        from benchmarks.roofline import load_rows, to_markdown
+
+        rows = load_rows(roofline_paths)
+        out["roofline"] = rows
+        print("\n== roofline (from the dry-run matrix) ==")
+        print(to_markdown(rows))
+
+    for name in ("table2", "table3", "table4", "table5", "table6"):
+        if name in out:
+            print(f"\n== {name} ==")
+            for row in out[name]:
+                print(" ", {k: (round(v, 4) if isinstance(v, float) else v)
+                            for k, v in row.items()})
+    if args.json:
+        json.dump(out, open(args.json, "w"), indent=1, default=str)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

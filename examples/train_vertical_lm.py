@@ -1,0 +1,24 @@
+"""End-to-end training driver (deliverable b): train a ~100M-param
+vertical-split LM for a few hundred steps.
+
+On a TPU pod this is the same step function the multi-pod dry-run lowers
+(launch/dryrun.py); on this CPU host the default invocation uses the 25M
+preset so a few hundred steps finish in minutes.  Pass --scale 100m for the
+full assignment-sized run.
+
+  PYTHONPATH=src python examples/train_vertical_lm.py               # 25M
+  PYTHONPATH=src python examples/train_vertical_lm.py --scale 100m --steps 300
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if not any(a.startswith("--scale") for a in argv):
+        argv = ["--scale", "25m"] + argv
+    if not any(a.startswith("--steps") for a in argv):
+        argv += ["--steps", "200"]
+    if not any(a.startswith("--batch") for a in argv):
+        argv += ["--batch", "4", "--seq", "128"]
+    raise SystemExit(main(argv))

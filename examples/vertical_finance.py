@@ -1,0 +1,78 @@
+"""The paper's own pipeline, end to end: vertically partitioned financial
+data across institutions, SplitNN training, merge comparison, client drops,
+secure aggregation and communication accounting.
+
+  PYTHONPATH=src python examples/vertical_finance.py [--steps 200]
+"""
+import argparse
+import dataclasses
+import os
+import sys
+
+# the benchmarks package lives at the repo root
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.paper_tables import split_eval, train_centralized, train_split
+from repro.configs.vertical_mlp import BANK_MARKETING
+from repro.core import secure_agg, split_model, towers
+from repro.core.costs import epoch_traffic
+from repro.core.dropping import sample_live_mask
+from repro.data.synthetic import make_dataset
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    ds = make_dataset("bank_marketing")
+    cfg = BANK_MARKETING
+    print(f"dataset: {ds.name} {ds.x_train.shape} "
+          f"(clients hold {cfg.client_feature_sizes} features — the paper's "
+          f"by-source split: bank-client data vs socio-economic context)\n")
+
+    # --- Table 2: centralized vs split ------------------------------------
+    pc, _ = train_centralized(cfg, ds, steps=args.steps)
+    acc_c = float(np.mean(
+        np.asarray(jnp.argmax(split_model.centralized_forward(
+            pc, jnp.asarray(ds.x_test)), -1)) == ds.y_test))
+    psplit, _ = train_split(cfg, ds, steps=args.steps)
+    acc_s, f1_s = split_eval(psplit, cfg, ds)
+    print(f"centralized acc={acc_c:.3f}   split(max-pool) acc={acc_s:.3f} "
+          f"f1={f1_s:.3f}  -> parity, no raw data shared\n")
+
+    # --- client drops (Table 4) -------------------------------------------
+    for drop in (0, 1):
+        live = (None if drop == 0
+                else sample_live_mask(jax.random.PRNGKey(0), 2, drop))
+        acc, _ = split_eval(psplit, cfg, ds, live_mask=live)
+        print(f"test-time drop={drop}: acc={acc:.3f}")
+
+    # --- secure aggregation (sum/avg only, paper §3) ------------------------
+    cfg_avg = dataclasses.replace(cfg, merge="avg")
+    params = split_model.init_split_mlp(jax.random.PRNGKey(0), cfg_avg)
+    x = jnp.asarray(ds.x_test[:32])
+    slices = split_model.feature_slices(cfg_avg)
+    cuts = jnp.stack([
+        towers.mlp_tower_apply(params["towers"][k], x[:, jnp.asarray(s.indices)])
+        for k, s in enumerate(slices)
+    ])
+    agg, masked = secure_agg.secure_sum(cuts, base_seed=42, scale=10.0)
+    leak = float(jnp.max(jnp.abs(agg - cuts.sum(0))))
+    hidden = float(jnp.mean(jnp.abs(masked[0] - cuts[0])))
+    print(f"\nsecure aggregation: aggregate error {leak:.2e} (exact), "
+          f"per-client masking magnitude {hidden:.1f} (server sees noise)")
+
+    # --- communication accounting (Table 5) --------------------------------
+    t = epoch_traffic(cfg, num_samples=len(ds.x_train), batch_size=32)
+    for role, tr in t.items():
+        print(f"{role}: sent {tr.sent_bytes/1e6:.1f} MB/epoch, "
+              f"received {tr.received_bytes/1e6:.1f} MB/epoch")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Msgpack pytree checkpointing (no orbax dependency).
+
+Arrays are serialized as (dtype, shape, raw bytes); the pytree structure as
+nested msgpack maps/lists.  Supports atomic writes (tmp + rename), a step
+counter, and restore onto a target sharding (device_put per leaf).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_ARRAY_KEY = "__nd__"
+_BF16_KEY = "__bf16__"
+
+
+def _pack_leaf(x):
+    arr = np.asarray(jax.device_get(x))
+    if arr.dtype == jnp.bfloat16:
+        return {
+            _ARRAY_KEY: True, _BF16_KEY: True, "shape": list(arr.shape),
+            "data": arr.view(np.uint16).tobytes(),
+        }
+    return {
+        _ARRAY_KEY: True, "dtype": arr.dtype.str, "shape": list(arr.shape),
+        "data": arr.tobytes(),
+    }
+
+
+def _unpack_leaf(d):
+    shape = tuple(d["shape"])
+    if d.get(_BF16_KEY):
+        return np.frombuffer(d["data"], np.uint16).reshape(shape).view(jnp.bfloat16)
+    return np.frombuffer(d["data"], np.dtype(d["dtype"])).reshape(shape)
+
+
+def _encode(tree):
+    if isinstance(tree, dict):
+        return {k: _encode(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return {"__list__": [_encode(v) for v in tree],
+                "__tuple__": isinstance(tree, tuple)}
+    if tree is None:
+        return {"__none__": True}
+    return _pack_leaf(tree)
+
+
+def _decode(obj):
+    if isinstance(obj, dict):
+        if obj.get(_ARRAY_KEY):
+            return _unpack_leaf(obj)
+        if obj.get("__none__"):
+            return None
+        if "__list__" in obj:
+            items = [_decode(v) for v in obj["__list__"]]
+            return tuple(items) if obj.get("__tuple__") else items
+        return {k: _decode(v) for k, v in obj.items()}
+    return obj
+
+
+def save_checkpoint(path: str, tree: Any, step: Optional[int] = None) -> None:
+    payload = {"tree": _encode(tree)}
+    if step is not None:
+        payload["step"] = step
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def load_checkpoint(path: str, target_shardings=None):
+    """Returns (tree, step). If target_shardings is a pytree of shardings,
+    each leaf is device_put onto its target."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False, strict_map_key=False)
+    tree = _decode(payload["tree"])
+    if target_shardings is not None:
+        tree = jax.tree_util.tree_map(
+            lambda leaf, sh: jax.device_put(leaf, sh), tree, target_shardings
+        )
+    return tree, payload.get("step")

@@ -1,0 +1,26 @@
+"""The paper's primary contribution: SplitNN-driven vertical partitioning.
+
+Vertical feature partitioning (partition), the five cut-layer merge
+strategies with drop semantics and collective realizations (merge), client
+towers (towers), the end-to-end split MLP of the paper's experiments
+(split_model), the role-0/1/3 protocol with its communications ledger
+(protocol), Bonawitz-style secure aggregation (secure_agg), client-drop
+simulation (dropping), analytic cost model (costs), and the beyond-paper
+extensions: cut-layer compression (compression), Compact Bilinear Pooling
+merge (bilinear), NoPeek leakage metric/penalty (leakage), and straggler
+EMA-imputation (straggler).
+"""
+from repro.core import (  # noqa: F401
+    bilinear,
+    compression,
+    costs,
+    dropping,
+    leakage,
+    merge,
+    partition,
+    protocol,
+    secure_agg,
+    split_model,
+    straggler,
+    towers,
+)

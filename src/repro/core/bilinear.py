@@ -1,0 +1,106 @@
+"""Compact Bilinear Pooling merge (paper §3: "one can readily employ other
+encoding methods like Compact Bilinear Pooling ... instead of the pooling
+mechanisms for a more robust representation learning").
+
+CBP (Gao et al., CVPR 2016) approximates the outer-product (bilinear)
+interaction of two feature vectors by convolving their Count-Sketch
+projections — computed in O(D + d log d) via FFT:
+
+    psi(x): count-sketch of x into d dims (random signs s, random buckets h)
+    cbp(x, y) = ifft( fft(psi(x)) * fft(psi(y)) )
+
+For K > 2 clients we fold clients in sequentially (the frequency-domain
+product of all K sketches), which approximates the order-K polynomial
+interaction — strictly richer than element-wise mul while staying O(d).
+
+Like sum/avg, the sketch is linear, so a dropped client is imputed with the
+sketch of the neutral vector; unlike mul, CBP of a dropped client uses the
+*mean sketch* convention (see merge_cbp live handling).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CountSketch(NamedTuple):
+    """Fixed random sketch parameters (shared by all parties, public)."""
+
+    signs: jnp.ndarray  # (K, D) in {-1, +1}
+    buckets: jnp.ndarray  # (K, D) int32 in [0, d_out)
+    d_out: int
+
+    @staticmethod
+    def create(key, num_clients: int, d_in: int, d_out: int) -> "CountSketch":
+        k1, k2 = jax.random.split(key)
+        signs = jax.random.rademacher(
+            k1, (num_clients, d_in), dtype=jnp.float32
+        )
+        buckets = jax.random.randint(k2, (num_clients, d_in), 0, d_out)
+        return CountSketch(signs, buckets, d_out)
+
+
+def count_sketch(x: jnp.ndarray, signs: jnp.ndarray, buckets: jnp.ndarray,
+                 d_out: int) -> jnp.ndarray:
+    """x: (..., D) -> (..., d_out); psi preserves inner products in
+    expectation: E[<psi(x), psi(y)>] = <x, y>."""
+    signed = x * signs
+    out = jnp.zeros((*x.shape[:-1], d_out), x.dtype)
+    return out.at[..., buckets].add(signed) if x.ndim == 1 else \
+        _batched_scatter(signed, buckets, d_out)
+
+
+def _batched_scatter(signed, buckets, d_out):
+    """signed: (..., D); buckets: (D,) -> (..., d_out) via one-hot matmul
+    (scatter-free: friendly to vmap/pjit)."""
+    onehot = jax.nn.one_hot(buckets, d_out, dtype=signed.dtype)  # (D, d_out)
+    return signed @ onehot
+
+
+def merge_cbp(
+    cuts: jnp.ndarray,  # (K, ..., D) client cut activations
+    sketch: CountSketch,
+    *,
+    live_mask=None,  # (K,) — dropped clients contribute the mean sketch
+) -> jnp.ndarray:
+    """Compact bilinear merge of K clients -> (..., d_out) real features."""
+    K = cuts.shape[0]
+    if live_mask is None:
+        live_mask = jnp.ones((K,), cuts.dtype)
+    sketches = jnp.stack([
+        _batched_scatter(cuts[k] * sketch.signs[k], sketch.buckets[k],
+                         sketch.d_out)
+        for k in range(K)
+    ])  # (K, ..., d_out)
+
+    # dropped client -> mean sketch of the live ones (keeps the product's
+    # scale stable; the mul-style neutral element 1 is wrong in sketch space)
+    lv = live_mask.reshape((K,) + (1,) * (sketches.ndim - 1))
+    n_live = jnp.maximum(jnp.sum(live_mask), 1.0)
+    mean_sketch = jnp.sum(sketches * lv, axis=0) / n_live.astype(cuts.dtype)
+    sketches = jnp.where(lv > 0, sketches, mean_sketch[None])
+
+    freq = jnp.fft.rfft(sketches.astype(jnp.float32), axis=-1)
+    prod = freq[0]
+    for k in range(1, K):
+        prod = prod * freq[k]
+    out = jnp.fft.irfft(prod, n=sketch.d_out, axis=-1)
+    # signed sqrt + l2 normalization (standard CBP post-processing)
+    out = jnp.sign(out) * jnp.sqrt(jnp.abs(out) + 1e-8)
+    norm = jnp.linalg.norm(out, axis=-1, keepdims=True)
+    return (out / jnp.maximum(norm, 1e-6)).astype(cuts.dtype)
+
+
+def sketch_inner_product_preserved(key, d_in=64, d_out=512, n=256) -> float:
+    """Diagnostic: mean relative error of <psi(x), psi(y)> vs <x, y>."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    xs = jax.random.normal(k1, (n, d_in))
+    ys = jax.random.normal(k2, (n, d_in))
+    sk = CountSketch.create(k3, 1, d_in, d_out)
+    px = _batched_scatter(xs * sk.signs[0], sk.buckets[0], d_out)
+    py = _batched_scatter(ys * sk.signs[0], sk.buckets[0], d_out)
+    true = jnp.sum(xs * ys, -1)
+    est = jnp.sum(px * py, -1)
+    return float(jnp.mean(jnp.abs(est - true)) / jnp.mean(jnp.abs(true)))

@@ -1,0 +1,86 @@
+"""[Beyond paper] Cut-layer activation compression.
+
+The paper's §4.4 names STC-style sparsification and random-rotation
+compression as future work for reducing cut-layer traffic.  We implement two
+schemes with straight-through gradients so they compose with end-to-end
+training:
+
+* top-k sparsification (STC-flavoured): keep the k largest-|x| entries per
+  feature vector, zero the rest — traffic shrinks to ~k (values + indices);
+* int8 affine quantization: per-vector scale/zero-point.
+
+Both report their wire-bytes so EXPERIMENTS.md can trade accuracy against
+the collective roofline term.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.custom_vjp
+def _ste(x, y):
+    """Straight-through: forward y, backward identity w.r.t. x."""
+    return y
+
+
+def _ste_fwd(x, y):
+    return y, None
+
+
+def _ste_bwd(_, g):
+    return g, None
+
+
+_ste.defvjp(_ste_fwd, _ste_bwd)
+
+
+def topk_sparsify(x: jnp.ndarray, fraction: float) -> jnp.ndarray:
+    """Keep the top-``fraction`` entries by magnitude along the last axis."""
+    D = x.shape[-1]
+    k = max(1, int(round(D * fraction)))
+    mag = jnp.abs(x)
+    # threshold from a stop_gradient'd copy: the selection is not
+    # differentiated (STE), and sort never sees a tangent (its JVP rule is
+    # broken against this jaxlib)
+    mag_sg = jax.lax.stop_gradient(mag)
+    kth = jnp.sort(mag_sg, axis=-1)[..., D - k][..., None]
+    sparse = jnp.where(mag >= kth, x, jnp.zeros_like(x))
+    return _ste(x, sparse)
+
+
+def int8_quantize(x: jnp.ndarray) -> jnp.ndarray:
+    """Fake-quantize to int8 per vector (affine), straight-through grads."""
+    lo = jnp.min(x, axis=-1, keepdims=True)
+    hi = jnp.max(x, axis=-1, keepdims=True)
+    scale = jnp.maximum(hi - lo, 1e-8) / 255.0
+    q = jnp.round((x - lo) / scale)
+    deq = q * scale + lo
+    return _ste(x, deq.astype(x.dtype))
+
+
+def apply_compression(x: jnp.ndarray, scheme: str | None, topk_fraction: float = 0.25):
+    if scheme is None:
+        return x
+    if scheme == "topk":
+        return topk_sparsify(x, topk_fraction)
+    if scheme == "int8":
+        return int8_quantize(x)
+    raise ValueError(f"unknown compression scheme {scheme!r}")
+
+
+def wire_bytes(shape, dtype_bytes: int, scheme: str | None, topk_fraction: float = 0.25) -> int:
+    """Bytes on the wire for one cut activation under a scheme."""
+    n = 1
+    for s in shape:
+        n *= s
+    if scheme is None:
+        return n * dtype_bytes
+    if scheme == "topk":
+        k = max(1, int(round(shape[-1] * topk_fraction)))
+        vecs = n // shape[-1]
+        return vecs * k * (dtype_bytes + 4)  # values + int32 indices
+    if scheme == "int8":
+        vecs = n // shape[-1]
+        return n + vecs * 8  # int8 payload + scale/zero-point per vector
+    raise ValueError(scheme)

@@ -1,0 +1,151 @@
+"""Analytic communication / computation cost model (paper Tables 5 & 6).
+
+The paper measures per-epoch bytes sent/received by each role and
+FLOPs/sample.  Both are pure functions of the architecture and the cut-layer
+width, so we reproduce them analytically and cross-check against the ledger
+kept by the protocol simulator (repro.core.protocol).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.vertical_mlp import MLPSplitConfig
+
+
+@dataclass(frozen=True)
+class RoleTraffic:
+    sent_bytes: int
+    received_bytes: int
+
+
+def mlp_forward_flops(dims: list[int], batch: int = 1) -> int:
+    """2*m*n per dense layer, per sample."""
+    total = 0
+    for d_in, d_out in zip(dims[:-1], dims[1:]):
+        total += 2 * d_in * d_out
+    return total * batch
+
+
+def mlp_param_count(dims: list[int]) -> int:
+    total = 0
+    for d_in, d_out in zip(dims[:-1], dims[1:]):
+        total += d_in * d_out + d_out
+    return total
+
+
+def split_mlp_params(cfg: MLPSplitConfig) -> int:
+    from repro.core.merge import merged_dim
+
+    total = 0
+    for fs in cfg.client_feature_sizes:
+        total += mlp_param_count([fs, *cfg.tower_hidden, cfg.cut_dim])
+    server_in = merged_dim(cfg.merge, cfg.cut_dim, cfg.num_clients)
+    total += mlp_param_count([server_in, *cfg.server_hidden, cfg.num_classes])
+    return total
+
+
+def split_mlp_flops_per_sample(cfg: MLPSplitConfig) -> int:
+    from repro.core.merge import merged_dim
+
+    total = 0
+    for fs in cfg.client_feature_sizes:
+        total += mlp_forward_flops([fs, *cfg.tower_hidden, cfg.cut_dim])
+    server_in = merged_dim(cfg.merge, cfg.cut_dim, cfg.num_clients)
+    total += mlp_forward_flops([server_in, *cfg.server_hidden, cfg.num_classes])
+    return total
+
+
+def advise_split_depth(
+    cfg: MLPSplitConfig,
+    *,
+    bandwidth_bytes_per_s: float,
+    client_flops_per_s: float,
+    server_flops_per_s: float,
+    batch_size: int = 32,
+    min_private_layers: int = 1,
+) -> dict:
+    """The paper's §4.4 placement guidance, made executable.
+
+    "Where the bottleneck is communication, most of the training should be
+    done in workers with roles 1 and 3 so the outputs of their networks are
+    as small as possible; where the bottleneck is compute, those workers
+    should have the minimum amount of layers to keep the data private."
+
+    Returns the recommended tower depth (in units of the configured hidden
+    stack) and the estimated per-batch times for both extremes.
+    """
+    cut_bytes = batch_size * cfg.cut_dim * 4
+    comm_s = 2 * cut_bytes * cfg.num_clients / bandwidth_bytes_per_s
+
+    tower_flops = sum(
+        mlp_forward_flops([fs, *cfg.tower_hidden, cfg.cut_dim], batch_size)
+        for fs in cfg.client_feature_sizes
+    )
+    from repro.core.merge import merged_dim
+
+    server_in = merged_dim(cfg.merge, cfg.cut_dim, cfg.num_clients)
+    server_flops = mlp_forward_flops(
+        [server_in, *cfg.server_hidden, cfg.num_classes], batch_size
+    )
+    t_client = tower_flops / client_flops_per_s
+    t_server = server_flops / server_flops_per_s
+
+    comm_bound = comm_s > (t_client + t_server)
+    recommended = (
+        len(cfg.tower_hidden) + len(cfg.server_hidden)  # deep towers
+        if comm_bound
+        else min_private_layers  # thin towers, core on role 0
+    )
+    return {
+        "comm_bound": bool(comm_bound),
+        "comm_s_per_batch": comm_s,
+        "client_s_per_batch": t_client,
+        "server_s_per_batch": t_server,
+        "recommended_tower_layers": recommended,
+        "rationale": (
+            "communication-bound: move layers into the clients so the cut "
+            "stays small" if comm_bound else
+            "compute-bound: keep towers at the privacy-minimum and put the "
+            "core on the role-0 worker"
+        ),
+    }
+
+
+def epoch_traffic(
+    cfg: MLPSplitConfig,
+    num_samples: int,
+    batch_size: int,
+    bytes_per_float: int = 4,
+) -> dict[str, RoleTraffic]:
+    """Per-epoch traffic by role, following the paper's §4.4 accounting.
+
+    Roles (Ceballos et al. 2020): role 1 = features only, role 3 = features +
+    labels (computes the loss), role 0 = compute-only server.  Clients 1..K
+    hold the feature slices (one of them also holds labels -> role 3); the
+    server is role 0.
+
+    Per batch:
+      * every feature-holder sends its cut activation (B x cut_dim) to role 0
+        and receives the matching jacobian back;
+      * role 0 sends the head output (B x num_classes) to role 3 for the loss
+        and receives the head jacobian back.
+    """
+    num_batches = num_samples // batch_size
+    cut = batch_size * cfg.cut_dim * bytes_per_float
+    head = batch_size * cfg.num_classes * bytes_per_float
+
+    role1 = RoleTraffic(
+        sent_bytes=cut * num_batches, received_bytes=cut * num_batches
+    )
+    # role 3 = one feature-holder + the loss exchange
+    role3 = RoleTraffic(
+        sent_bytes=(cut + head) * num_batches,
+        received_bytes=(cut + head) * num_batches,
+    )
+    # role 0 receives K cut tensors + 1 head jacobian; sends K jacobians + head
+    k = cfg.num_clients
+    role0 = RoleTraffic(
+        sent_bytes=(cut * k + head) * num_batches,
+        received_bytes=(cut * k + head) * num_batches,
+    )
+    return {"role1": role1, "role3": role3, "role0": role0}

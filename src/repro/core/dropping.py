@@ -1,0 +1,36 @@
+"""Client-drop simulation (paper §4.3, Table 4, Figure 3).
+
+The paper drops 1-3 of 4 clients uniformly at random, either per training
+iteration ("drop during training") or on the test set ("drop during
+testing").  A drop is realized as a live-mask handed to the merge — dropped
+clients contribute their strategy's neutral element.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_live_mask(key, num_clients: int, num_drop: int) -> jnp.ndarray:
+    """Uniformly drop exactly ``num_drop`` clients. Returns (K,) float 0/1."""
+    if num_drop <= 0:
+        return jnp.ones((num_clients,), jnp.float32)
+    if num_drop >= num_clients:
+        raise ValueError("cannot drop every client")
+    scores = jax.random.uniform(key, (num_clients,))
+    # the num_drop smallest scores are dropped
+    threshold = jnp.sort(scores)[num_drop - 1]
+    return (scores > threshold).astype(jnp.float32)
+
+
+def bernoulli_live_mask(key, num_clients: int, drop_prob: float) -> jnp.ndarray:
+    """Independent per-client drop (straggler model); guarantees >=1 live."""
+    live = jax.random.bernoulli(key, 1.0 - drop_prob, (num_clients,))
+    # if everyone dropped, resurrect a uniformly-chosen client
+    any_live = jnp.any(live)
+    fallback = jax.nn.one_hot(
+        jax.random.randint(jax.random.fold_in(key, 1), (), 0, num_clients),
+        num_clients,
+        dtype=bool,
+    )
+    return jnp.where(any_live, live, fallback).astype(jnp.float32)

@@ -1,0 +1,134 @@
+"""The paper's five cut-layer merge strategies, with client-drop semantics.
+
+Two formulations:
+
+* ``merge_stacked`` — functional form over stacked client outputs
+  ``(K, ..., D)``; used by the model stack (towers are vmapped over K) and
+  by the pure-jnp oracle of the fused Pallas ``merge_pool`` kernel.
+* ``merge_collective`` — shard_map form where each client's cut activation
+  lives on its own device group and the merge IS the collective
+  (sum/avg -> psum, max -> pmax, concat -> all_gather, mul -> gathered
+  product).  This realizes the paper's communication topology on the mesh.
+
+Drop semantics (paper §4.3): a dropped client contributes its strategy's
+neutral element; ``avg`` renormalizes by the number of live clients so the
+merged scale is drop-invariant.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MERGE_STRATEGIES
+
+NEG_INF = -3.0e38  # ~ -max_float32; neutral element for max
+
+
+def neutral_element(strategy: str) -> float:
+    return {"sum": 0.0, "avg": 0.0, "concat": 0.0, "max": NEG_INF, "mul": 1.0}[strategy]
+
+
+def merge_stacked(
+    outputs: jnp.ndarray,  # (K, ..., D) stacked client cut activations
+    strategy: str,
+    *,
+    live_mask: Optional[jnp.ndarray] = None,  # (K,) bool/float, 1 = client alive
+) -> jnp.ndarray:
+    """Merge K client outputs. Result (..., D) — or (..., K*D) for concat."""
+    if strategy not in MERGE_STRATEGIES:
+        raise ValueError(f"unknown merge {strategy!r}")
+    K = outputs.shape[0]
+    if live_mask is None:
+        live = jnp.ones((K,), outputs.dtype)
+    else:
+        live = live_mask.astype(outputs.dtype)
+    shape = (K,) + (1,) * (outputs.ndim - 1)
+    lv = live.reshape(shape)
+
+    if strategy == "sum":
+        return jnp.sum(outputs * lv, axis=0)
+    if strategy == "avg":
+        n_live = jnp.maximum(jnp.sum(live), 1.0)
+        return jnp.sum(outputs * lv, axis=0) / n_live.astype(outputs.dtype)
+    if strategy == "max":
+        masked = jnp.where(lv > 0, outputs, jnp.asarray(NEG_INF, outputs.dtype))
+        out = jnp.max(masked, axis=0)
+        # all clients dropped -> zeros, not -inf
+        return jnp.where(jnp.sum(live) > 0, out, jnp.zeros_like(out))
+    if strategy == "mul":
+        masked = jnp.where(lv > 0, outputs, jnp.ones_like(outputs))
+        return jnp.prod(masked, axis=0)
+    # concat: dropped clients contribute zeros (the server still sees K*D)
+    masked = outputs * lv
+    return jnp.concatenate([masked[k] for k in range(K)], axis=-1)
+
+
+def merge_stacked_vjp_check(strategy: str) -> None:
+    """The paper's 'jacobian splitting': under jax.grad the backward of the
+    merge routes each client its own gradient slice automatically — concat
+    splits, sum/avg broadcast (scaled), max routes to the argmax holder,
+    mul routes scaled by the other clients' product.  Nothing to implement:
+    this function exists to document the invariant tested in
+    tests/test_merge.py::test_jacobian_splitting.
+    """
+
+
+# ---------------------------------------------------------------------------
+# collective (shard_map) formulation
+# ---------------------------------------------------------------------------
+
+def merge_collective(
+    local_out: jnp.ndarray,  # (..., D) — this client's cut activation
+    strategy: str,
+    axis_name: str,
+    *,
+    live: Optional[jnp.ndarray] = None,  # scalar 1/0 — is this client alive
+):
+    """Merge across the ``client`` mesh axis; call inside shard_map.
+
+    The collective type is determined by the merge strategy — this is the
+    paper's single cut-layer communication realized on the TPU mesh.
+    """
+    if live is None:
+        live = jnp.ones((), local_out.dtype)
+    lv = live.astype(local_out.dtype)
+
+    if strategy == "sum":
+        return jax.lax.psum(local_out * lv, axis_name)
+    if strategy == "avg":
+        total = jax.lax.psum(local_out * lv, axis_name)
+        n_live = jax.lax.psum(lv, axis_name)
+        return total / jnp.maximum(n_live, 1.0)
+    if strategy == "max":
+        masked = jnp.where(lv > 0, local_out, jnp.asarray(NEG_INF, local_out.dtype))
+        return jax.lax.pmax(masked, axis_name)
+    if strategy == "mul":
+        gathered = jax.lax.all_gather(
+            jnp.where(lv > 0, local_out, jnp.ones_like(local_out)), axis_name
+        )
+        return jnp.prod(gathered, axis=0)
+    # concat along features
+    gathered = jax.lax.all_gather(local_out * lv, axis_name)  # (K, ..., D)
+    K = gathered.shape[0]
+    return jnp.concatenate([gathered[k] for k in range(K)], axis=-1)
+
+
+def merged_dim(strategy: str, cut_dim: int, num_clients: int) -> int:
+    """Width of the merged activation seen by the server network."""
+    return cut_dim * num_clients if strategy == "concat" else cut_dim
+
+
+def collective_bytes_per_merge(
+    strategy: str, cut_elements: int, num_clients: int, bytes_per_elt: int = 2
+) -> int:
+    """Analytic cut-layer traffic per client per merge (paper Table 5 model).
+
+    sum/avg/max: all-reduce ~ 2x payload (reduce-scatter + all-gather);
+    concat/mul: all-gather ~ (K-1)/K * K*payload received.
+    """
+    payload = cut_elements * bytes_per_elt
+    if strategy in ("sum", "avg", "max"):
+        return 2 * payload * (num_clients - 1) // max(num_clients, 1)
+    return payload * (num_clients - 1)

@@ -1,0 +1,76 @@
+"""Bonawitz-style secure aggregation for the sum/avg merges.
+
+Protocol shape (faithful to Bonawitz et al. 2016, simplified to the
+honest-but-curious, no-dropout-recovery case the paper cites):
+
+* every ordered client pair (i < j) agrees on a seed ``s_ij``;
+* client i adds  ``+PRG(s_ij)`` for every j > i and ``-PRG(s_ji)`` for every
+  j < i to its cut activation before sending;
+* the pairwise masks cancel exactly in the sum, so the server learns only
+  the aggregate — never an individual client's cut activation.
+
+The PRG is ``jax.random`` (threefry) rather than a cryptographic PRF —
+the *protocol arithmetic* is what we implement and test, per DESIGN.md §2.
+Masks live in float32; cancellation is exact because each mask value is
+added and subtracted once as the identical f32 number.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pair_seed(base_seed: int, i: int, j: int, round_idx: int = 0) -> jax.Array:
+    """Deterministic per-pair, per-round seed (i < j canonical order)."""
+    lo, hi = (i, j) if i < j else (j, i)
+    return jax.random.fold_in(
+        jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(base_seed), lo), hi
+        ),
+        round_idx,
+    )
+
+
+def client_mask(
+    base_seed: int, client: int, num_clients: int, shape, round_idx: int = 0,
+    scale: float = 1.0,
+) -> jnp.ndarray:
+    """The net mask client ``client`` adds to its payload."""
+    mask = jnp.zeros(shape, jnp.float32)
+    for other in range(num_clients):
+        if other == client:
+            continue
+        key = pair_seed(base_seed, client, other, round_idx)
+        noise = jax.random.normal(key, shape, jnp.float32) * scale
+        mask = mask + noise if client < other else mask - noise
+    return mask
+
+
+def mask_payload(
+    payload: jnp.ndarray, base_seed: int, client: int, num_clients: int,
+    round_idx: int = 0, scale: float = 1.0,
+) -> jnp.ndarray:
+    """What client ``client`` actually transmits."""
+    m = client_mask(base_seed, client, num_clients, payload.shape, round_idx, scale)
+    return payload.astype(jnp.float32) + m
+
+
+def secure_sum(
+    payloads: jnp.ndarray,  # (K, ...) true client payloads
+    base_seed: int,
+    round_idx: int = 0,
+    scale: float = 1.0,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Run the protocol; returns (aggregate, masked_payloads).
+
+    ``aggregate`` equals ``payloads.sum(0)`` exactly (mask cancellation);
+    ``masked_payloads`` is what the server observes per client.
+    """
+    K = payloads.shape[0]
+    masked = jnp.stack(
+        [
+            mask_payload(payloads[k], base_seed, k, K, round_idx, scale)
+            for k in range(K)
+        ]
+    )
+    return jnp.sum(masked, axis=0), masked

@@ -1,0 +1,124 @@
+"""VerticalSplitMLP — the paper's experimental model, end to end.
+
+K client towers over vertical feature slices + merge + server MLP, with
+client dropping, secure aggregation and (beyond paper) cut compression.
+The transformer-scale version lives in repro.models.transformer; this one
+drives the §Paper experiments (Tables 2-4).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.vertical_mlp import MLPSplitConfig
+from repro.core import compression as comp_lib
+from repro.core import merge as merge_lib
+from repro.core import partition as part_lib
+from repro.core import towers
+
+
+def feature_slices(cfg: MLPSplitConfig) -> list[part_lib.FeatureSlice]:
+    slices = part_lib.by_source_partition(cfg.client_feature_sizes)
+    part_lib.validate_partition(slices, cfg.input_dim)
+    return slices
+
+
+def init_split_mlp(key, cfg: MLPSplitConfig, dtype=jnp.float32):
+    keys = jax.random.split(key, cfg.num_clients + 1)
+    tower_params = [
+        towers.init_mlp_tower(
+            keys[k], [cfg.client_feature_sizes[k], *cfg.tower_hidden, cfg.cut_dim], dtype
+        )
+        for k in range(cfg.num_clients)
+    ]
+    server_in = merge_lib.merged_dim(cfg.merge, cfg.cut_dim, cfg.num_clients)
+    server_params = towers.init_mlp_tower(
+        keys[-1], [server_in, *cfg.server_hidden, cfg.num_classes], dtype
+    )
+    return {"towers": tower_params, "server": server_params}
+
+
+def init_centralized_mlp(key, cfg: MLPSplitConfig, dtype=jnp.float32):
+    """The paper's 'Single Model' baseline: same depth/width, full features."""
+    hidden = tuple(h * 1 for h in cfg.tower_hidden)
+    return towers.init_mlp_tower(
+        key,
+        [cfg.input_dim, *hidden, cfg.cut_dim, *cfg.server_hidden, cfg.num_classes],
+        dtype,
+    )
+
+
+def centralized_forward(params, x):
+    return towers.mlp_tower_apply(params, x)
+
+
+def split_forward(
+    params,
+    x,  # (B, input_dim) full feature matrix; slicing happens here
+    cfg: MLPSplitConfig,
+    *,
+    live_mask: Optional[jnp.ndarray] = None,
+    compression: Optional[str] = None,
+    topk_fraction: float = 0.25,
+):
+    slices = feature_slices(cfg)
+    cuts = []
+    for k, s in enumerate(slices):
+        x_k = x[:, jnp.asarray(s.indices)]
+        cut = towers.mlp_tower_apply(params["towers"][k], x_k)
+        cut = comp_lib.apply_compression(cut, compression, topk_fraction)
+        cuts.append(cut)
+    stacked = jnp.stack(cuts)  # (K, B, cut_dim)
+    merged = merge_lib.merge_stacked(stacked, cfg.merge, live_mask=live_mask)
+    return towers.mlp_tower_apply(params["server"], merged)
+
+
+def softmax_xent(logits, labels, num_classes: int):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    onehot = jax.nn.one_hot(labels, num_classes)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+def make_split_train_step(cfg: MLPSplitConfig, optimizer, *,
+                          num_drop: int = 0,
+                          compression: Optional[str] = None):
+    """Returns a jitted (params, opt_state, key, x, y) -> (params, opt_state, loss)."""
+
+    def loss_fn(params, key, x, y):
+        logits = split_forward(
+            params, x, cfg,
+            live_mask=_maybe_live(key, cfg.num_clients, num_drop),
+            compression=compression,
+            topk_fraction=0.25,
+        )
+        return softmax_xent(logits, y, cfg.num_classes)
+
+    def _maybe_live(key, K, nd):
+        if nd <= 0:
+            return None
+        from repro.core.dropping import sample_live_mask
+
+        return sample_live_mask(key, K, nd)
+
+    @jax.jit
+    def step(params, opt_state, key, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(params, key, x, y)
+        params, opt_state = optimizer.update(params, grads, opt_state)
+        return params, opt_state, loss
+
+    return step
+
+
+def make_centralized_train_step(cfg: MLPSplitConfig, optimizer):
+    def loss_fn(params, x, y):
+        return softmax_xent(centralized_forward(params, x), y, cfg.num_classes)
+
+    @jax.jit
+    def step(params, opt_state, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+        params, opt_state = optimizer.update(params, grads, opt_state)
+        return params, opt_state, loss
+
+    return step

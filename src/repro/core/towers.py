@@ -1,0 +1,35 @@
+"""Client tower networks.
+
+Two kinds:
+* MLP towers — the paper's own setting (tabular / embedded financial data);
+* transformer towers — the framework's generalization to the 10 assigned
+  architectures (built in repro.models.transformer, width d_model/K per
+  client, zero cross-client communication below the cut).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def init_mlp_tower(key, dims: list[int], dtype=jnp.float32):
+    """dims = [in, hidden..., out]; relu between, linear head."""
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        f"w{i}": layers.dense_init(keys[i], dims[i], dims[i + 1], dtype)
+        for i in range(len(dims) - 1)
+    } | {
+        f"b{i}": jnp.zeros((dims[i + 1],), dtype)
+        for i in range(len(dims) - 1)
+    }
+
+
+def mlp_tower_apply(params, x):
+    n = len([k for k in params if k.startswith("w")])
+    for i in range(n):
+        x = x @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x

@@ -1,0 +1,61 @@
+"""Sharding-aware batch loader.
+
+On a real multi-host deployment each host feeds its addressable shard of the
+global batch (``jax.make_array_from_process_local_data``); in this
+single-process environment the loader materializes the global batch and lets
+``jax.device_put`` shard it.  The interface is the deployment one.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.data.tokens import ZipfMotifStream
+
+
+class LMBatchLoader:
+    def __init__(self, cfg: ArchConfig, batch: int, seq_len: int, seed: int = 0,
+                 sharding: Optional[jax.sharding.NamedSharding] = None):
+        self.cfg = cfg
+        self.batch = batch
+        self.seq_len = seq_len
+        self.sharding = sharding
+        self.stream = ZipfMotifStream(cfg.vocab_size, seed)
+        self.rng = np.random.default_rng(seed + 1)
+
+    def __iter__(self) -> Iterator[dict]:
+        while True:
+            yield self.next_batch()
+
+    def next_batch(self) -> dict:
+        b = self.stream.batch(self.batch, self.seq_len)
+        if self.cfg.family == "audio":
+            n = self.cfg.encdec.encoder_seq_len
+            b["frames"] = self.rng.normal(
+                size=(self.batch, n, self.cfg.d_model)
+            ).astype(np.float32) * 0.5
+        elif self.cfg.family == "vlm":
+            nv = self.cfg.vlm.num_vision_tokens
+            b["patches"] = self.rng.normal(
+                size=(self.batch, nv, self.cfg.d_model)
+            ).astype(np.float32) * 0.5
+            b["tokens"] = b["tokens"][:, : self.seq_len - nv]
+            b["labels"] = b["labels"][:, : self.seq_len - nv]
+        if self.sharding is not None:
+            b = {
+                k: jax.device_put(v, self._sharding_for(v))
+                for k, v in b.items()
+            }
+        return b
+
+    def _sharding_for(self, v):
+        # batch axis sharded; everything else replicated
+        mesh = self.sharding.mesh
+        spec = self.sharding.spec
+        pad = [None] * (v.ndim - len(spec))
+        return jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(*spec, *pad)
+        )

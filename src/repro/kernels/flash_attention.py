@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: blocked causal flash attention (prefill hot path).
+
+Grid = (batch*heads, q_blocks, kv_blocks); the kv dimension is the innermost
+(sequential on TPU), so the online-softmax running state (m, l, acc) lives in
+VMEM scratch across kv steps.  BlockSpec tiles are (block_q, head_dim) /
+(block_kv, head_dim) — head_dim is the lane dimension (128-aligned for MXU),
+block_q/block_kv default 512 so the score tile (512x512 f32 = 1 MB) plus
+q/k/v/acc tiles fit comfortably in the ~16 MB VMEM budget.
+
+Causality is handled two ways:
+  * whole kv-blocks strictly above the diagonal are skipped via @pl.when
+    (no MXU work issued — this is the win over a masked dense rectangle);
+  * the diagonal block applies the element mask.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, block_q: int, block_kv: int, causal: bool,
+                  num_kv_blocks: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # skip kv blocks strictly above the causal diagonal
+    run = (not causal) or (ki * block_kv < (qi + 1) * block_q)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)  # (bq, d)
+        k = k_ref[0].astype(jnp.float32)  # (bkv, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            k_pos = ki * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_kv",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 512,
+                    block_kv: int = 512, interpret: bool = False):
+    """q/k/v: (B, H, S, D) — GQA callers pre-repeat kv heads. -> (B, H, S, D)."""
+    B, H, S, D = q.shape
+    block_q = min(block_q, S)
+    block_kv = min(block_kv, S)
+    assert S % block_q == 0 and S % block_kv == 0, (S, block_q, block_kv)
+    nq, nk = S // block_q, S // block_kv
+    scale = 1.0 / (D ** 0.5)
+
+    qf = q.reshape(B * H, S, D)
+    kf = k.reshape(B * H, S, D)
+    vf = v.reshape(B * H, S, D)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=scale, block_q=block_q, block_kv=block_kv,
+            causal=causal, num_kv_blocks=nk,
+        ),
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_kv, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_kv, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),   # acc
+            pltpu.VMEM((block_q,), jnp.float32),     # m (running max)
+            pltpu.VMEM((block_q,), jnp.float32),     # l (running denom)
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, D)

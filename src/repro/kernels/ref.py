@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the source of truth: kernels must match them (assert_allclose in
+tests, hypothesis shape/dtype sweeps) and the model stack calls THESE on
+non-TPU backends (ops.py selects).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import merge as merge_lib
+
+
+# ---------------------------------------------------------------------------
+# merge_pool: fused K-client cut-layer merge with drop mask
+# ---------------------------------------------------------------------------
+
+def merge_pool(stacked: jnp.ndarray, strategy: str,
+               live: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """stacked: (K, B, D) -> (B, D).  concat is excluded (it is a layout op,
+    not a reduction — no fusion win)."""
+    assert strategy in ("sum", "avg", "max", "mul")
+    return merge_lib.merge_stacked(stacked, strategy, live_mask=live)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (causal, GQA via pre-repeated heads)
+# ---------------------------------------------------------------------------
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    *, causal: bool = True) -> jnp.ndarray:
+    """q/k/v: (B, H, S, D) -> (B, H, S, D), plain softmax reference."""
+    B, H, S, D = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD intra-chunk kernel
+# ---------------------------------------------------------------------------
+
+def ssd_chunk(x: jnp.ndarray, a: jnp.ndarray, Bm: jnp.ndarray, Cm: jnp.ndarray):
+    """One chunk, one head — the quadratic intra-chunk SSD term.
+
+    x: (Q, P) inputs (already scaled by dt)
+    a: (Q,)   log-decays (dt * A, negative)
+    Bm/Cm: (Q, N)
+    Returns:
+      y_intra: (Q, P)  = (C B^T o L) x   with L[i,j] = exp(cum_i - cum_j), i>=j
+      state:   (P, N)  = sum_j exp(cum_Q - cum_j) x_j B_j^T
+      decay:   ()      = exp(cum_Q)  (carry factor for the inter-chunk scan)
+    """
+    Q = x.shape[0]
+    xf = x.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    Bf, Cf = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+    cum = jnp.cumsum(af)
+    diff = cum[:, None] - cum[None, :]
+    L = jnp.where(jnp.tril(jnp.ones((Q, Q), bool)), jnp.exp(diff), 0.0)
+    scores = (Cf @ Bf.T) * L
+    y_intra = scores @ xf
+    decay_to_end = jnp.exp(cum[-1] - cum)  # (Q,)
+    state = jnp.einsum("q,qp,qn->pn", decay_to_end, xf, Bf)
+    return y_intra, state, jnp.exp(cum[-1]), cum

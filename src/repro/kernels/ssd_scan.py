@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: Mamba2 SSD intra-chunk computation.
+
+Mirrors the structure of the official Mamba2 Triton kernels, re-tiled for
+TPU: the *quadratic* intra-chunk term (scores = (C B^T) o L, y = scores @ x)
+and the per-chunk state contribution run on the MXU per (batch, head, chunk)
+grid cell; the cheap O(n_chunks) inter-chunk recurrence stays a lax.scan in
+ops.py (it is sequential and tiny — (P, N) per head — not kernel-worthy).
+
+TPU adaptation (DESIGN.md §6): chunk Q=128 matches the MXU tile edge, so
+L/scores are one (128, 128) f32 tile; x/B/C tiles are (Q, P)/(Q, N) with
+P=64/N in {64, 128} — all lane-aligned.  Everything for one grid cell
+(~(Q*P + 2*Q*N + Q*Q + P*N) f32 ~ 0.2 MB) sits in VMEM at once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(x_ref, a_ref, b_ref, c_ref,
+                      y_ref, state_ref, decay_ref, cum_ref):
+    x = x_ref[0].astype(jnp.float32)   # (Q, P)
+    a = a_ref[0].astype(jnp.float32)   # (Q,)
+    Bm = b_ref[0].astype(jnp.float32)  # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)  # (Q, N)
+    Q = x.shape[0]
+
+    cum = jnp.cumsum(a)  # (Q,)
+    diff = cum[:, None] - cum[None, :]
+    row = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(row >= col, jnp.exp(diff), 0.0)
+
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * L
+    y_ref[0] = jax.lax.dot(scores, x,
+                           preferred_element_type=jnp.float32).astype(y_ref.dtype)
+
+    decay_to_end = jnp.exp(cum[-1] - cum)  # (Q,)
+    xw = x * decay_to_end[:, None]  # (Q, P)
+    state = jax.lax.dot_general(xw, Bm, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (P, N)
+    state_ref[0] = state.astype(state_ref.dtype)
+    decay_ref[0] = jnp.exp(cum[-1]).reshape(1)
+    cum_ref[0] = cum.astype(cum_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_batch(x, a, Bm, Cm, *, interpret: bool = False):
+    """Intra-chunk SSD over a whole batch of chunks.
+
+    x:  (G, Q, P)   — G = batch*heads*chunks flattened grid
+    a:  (G, Q)
+    Bm: (G, Q, N)
+    Cm: (G, Q, N)
+    Returns (y_intra (G,Q,P), state (G,P,N), decay (G,1), cum (G,Q)) — all f32.
+    """
+    G, Q, P = x.shape
+    N = Bm.shape[-1]
+    return pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=(G,),
+        in_specs=[
+            pl.BlockSpec((1, Q, P), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, Q), lambda g: (g, 0)),
+            pl.BlockSpec((1, Q, N), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, Q, N), lambda g: (g, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, P), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, P, N), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, 1), lambda g: (g, 0)),
+            pl.BlockSpec((1, Q), lambda g: (g, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((G, Q, P), jnp.float32),
+            jax.ShapeDtypeStruct((G, P, N), jnp.float32),
+            jax.ShapeDtypeStruct((G, 1), jnp.float32),
+            jax.ShapeDtypeStruct((G, Q), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, a, Bm, Cm)

@@ -1,0 +1,5 @@
+"""Launchers: production meshes, the multi-pod dry-run, the train driver.
+
+NOTE: import repro.launch.dryrun FIRST if you need the 512-device topology —
+it must set XLA_FLAGS before jax initializes.
+"""

@@ -1,0 +1,289 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production meshes, with NO device allocation (ShapeDtypeStruct stand-ins).
+
+The two lines above MUST stay the very first statements of this module —
+jax locks the device count on first initialization.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, ArchConfig, InputShape, get_arch, list_archs
+from repro.launch import mesh as mesh_lib
+from repro.models import backbone
+from repro.optim import AdamW
+from repro.sharding import specs as specs_lib
+from repro.sharding.collectives import collective_bytes_from_hlo
+
+
+def build_train_lowering(cfg: ArchConfig, shape: InputShape, mesh, *,
+                         dtype=jnp.bfloat16, vertical_mode="flat",
+                         donate=True, remat=True, fsdp=False):
+    """AOT-lower a full train step (fwd + bwd + AdamW/ZeRO-1 update)."""
+    opt = AdamW(learning_rate=3e-4, weight_decay=0.1)
+    p_shapes = jax.eval_shape(
+        lambda k: backbone.init_params(cfg, k, dtype), jax.random.PRNGKey(0)
+    )
+    o_shapes = jax.eval_shape(opt.init, p_shapes)
+    b_shapes = backbone.input_specs(cfg, shape, dtype=dtype)
+
+    p_specs = specs_lib.param_specs(cfg, p_shapes, mesh,
+                                    vertical_mode=vertical_mode, fsdp=fsdp)
+    if fsdp:
+        mu_specs = p_specs  # weights already sharded over every axis
+    else:
+        mu_specs = specs_lib.zero1_specs(p_specs, p_shapes, mesh)
+    o_specs = {"mu": mu_specs, "nu": mu_specs,
+               "count": jax.sharding.PartitionSpec()}
+    b_specs = specs_lib.batch_specs(b_shapes, mesh, fsdp=fsdp)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            logits, aux = backbone.forward(p, batch, cfg, remat=remat)
+            return backbone.lm_loss(logits, batch["labels"]) + aux
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state = opt.update(params, grads, opt_state)
+        return params, opt_state, loss
+
+    in_sh = specs_lib.named(mesh, (p_specs, o_specs, b_specs))
+    jitted = jax.jit(
+        train_step,
+        in_shardings=in_sh,
+        donate_argnums=(0, 1) if donate else (),
+    )
+    with mesh:
+        lowered = jitted.lower(p_shapes, o_shapes, b_shapes)
+    return lowered
+
+
+def build_prefill_lowering(cfg: ArchConfig, shape: InputShape, mesh, *,
+                           dtype=jnp.bfloat16, vertical_mode="flat"):
+    p_shapes = jax.eval_shape(
+        lambda k: backbone.init_params(cfg, k, dtype), jax.random.PRNGKey(0)
+    )
+    b_shapes = backbone.input_specs(cfg, shape, dtype=dtype)
+    p_specs = specs_lib.param_specs(cfg, p_shapes, mesh, vertical_mode=vertical_mode)
+    b_specs = specs_lib.batch_specs(b_shapes, mesh)
+
+    def prefill(params, batch):
+        logits, _ = backbone.forward(params, batch, cfg)
+        return logits
+
+    in_sh = specs_lib.named(mesh, (p_specs, b_specs))
+    jitted = jax.jit(prefill, in_shardings=in_sh)
+    with mesh:
+        lowered = jitted.lower(p_shapes, b_shapes)
+    return lowered
+
+
+def build_decode_lowering(cfg: ArchConfig, shape: InputShape, mesh, *,
+                          dtype=jnp.bfloat16, vertical_mode="flat",
+                          shard_seq_over_model=False, decode_chunks=None,
+                          kv_quant=False):
+    p_shapes = jax.eval_shape(
+        lambda k: backbone.init_params(cfg, k, dtype), jax.random.PRNGKey(0)
+    )
+    io = backbone.input_specs(cfg, shape, dtype=dtype, kv_quant=kv_quant)
+    cache_shapes, tok_shapes = io["cache"], io["tokens"]
+    cache_len, ring = backbone.decode_cache_plan(cfg, shape)
+    window = cfg.sliding_window if ring else None
+
+    p_specs = specs_lib.param_specs(cfg, p_shapes, mesh, vertical_mode=vertical_mode)
+    c_specs = specs_lib.cache_specs(cfg, cache_shapes, mesh,
+                                    shard_seq_over_model=shard_seq_over_model)
+    t_specs = specs_lib.batch_specs({"tokens": tok_shapes}, mesh)["tokens"]
+
+    def serve_step(params, cache, tokens):
+        return backbone.decode_step(params, cache, tokens, cfg,
+                                    window=window, ring=ring,
+                                    decode_chunks=decode_chunks)
+
+    in_sh = specs_lib.named(mesh, (p_specs, c_specs, t_specs))
+    jitted = jax.jit(serve_step, in_shardings=in_sh,
+                     donate_argnums=(1,))
+    with mesh:
+        lowered = jitted.lower(p_shapes, cache_shapes, tok_shapes)
+    return lowered
+
+
+def build_lowering(cfg: ArchConfig, shape: InputShape, mesh, **kw):
+    if shape.kind == "train":
+        for k in ("shard_seq_over_model", "decode_chunks", "kv_quant"):
+            kw.pop(k, None)
+        return build_train_lowering(cfg, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        for k in ("remat", "shard_seq_over_model", "decode_chunks", "fsdp",
+                  "kv_quant"):
+            kw.pop(k, None)
+        return build_prefill_lowering(cfg, shape, mesh, **kw)
+    kw.pop("remat", None)
+    kw.pop("fsdp", None)
+    return build_decode_lowering(cfg, shape, mesh, **kw)
+
+
+def analyze(lowered, compiled, mesh) -> dict:
+    """Extract roofline raw terms from the compiled artifact.
+
+    NOTE: XLA cost_analysis counts while-loop (scan) bodies once, so
+    hlo_flops/hlo_bytes are 'as-compiled' lower bounds; collective bytes are
+    additionally reported loop-corrected (trip counts parsed from the HLO —
+    see repro.sharding.hlo_loops).  The roofline compute/memory terms come
+    from benchmarks/analytic.py.
+    """
+    from repro.sharding.hlo_loops import loop_aware_collective_bytes
+
+    n_dev = mesh.devices.size
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    hlo_text = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo_text)
+    corrected = loop_aware_collective_bytes(hlo_text)
+    mem = compiled.memory_analysis()
+    out = {
+        "devices": n_dev,
+        "hlo_flops": flops,
+        "hlo_bytes": bytes_accessed,
+        "collective_bytes": coll["total"],
+        "collectives": coll["by_kind"],
+        "collective_bytes_corrected": corrected["total"],
+        "collective_wire_bytes": corrected["wire_total"],
+        "collectives_corrected": corrected["by_kind"],
+    }
+    if mem is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                out[attr] = int(v)
+    return out
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod=False, vertical="on",
+            vertical_mode="flat", dtype=jnp.bfloat16, verbose=True,
+            merge=None, fsdp=False, remat=True, shard_seq_over_model=False,
+            decode_chunks=None, kv_quant=False, capacity_factor=None,
+            tag="") -> dict:
+    cfg = get_arch(arch)
+    if vertical == "off":
+        cfg = cfg.with_vertical(None)
+    if merge and cfg.vertical is not None:
+        cfg = cfg.with_vertical(dataclasses.replace(cfg.vertical, merge=merge))
+    if capacity_factor is not None and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe,
+                                         capacity_factor=capacity_factor))
+    shape = INPUT_SHAPES[shape_name]
+    if vertical_mode == "client":
+        k = cfg.vertical.num_clients if cfg.vertical else 4
+        mesh = mesh_lib.make_client_factored_mesh(num_clients=k, multi_pod=multi_pod)
+    else:
+        mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+
+    t0 = time.time()
+    lowered = build_lowering(cfg, shape, mesh, dtype=dtype,
+                             vertical_mode=vertical_mode, fsdp=fsdp,
+                             remat=remat,
+                             shard_seq_over_model=shard_seq_over_model,
+                             decode_chunks=decode_chunks, kv_quant=kv_quant)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    info = analyze(lowered, compiled, mesh)
+    info.update(
+        arch=arch, shape=shape_name, multi_pod=multi_pod,
+        vertical=vertical, vertical_mode=vertical_mode,
+        merge=merge, fsdp=fsdp, remat=remat,
+        shard_seq_over_model=shard_seq_over_model,
+        decode_chunks=decode_chunks, kv_quant=kv_quant, tag=tag,
+        lower_s=round(t1 - t0, 2), compile_s=round(t2 - t1, 2),
+    )
+    if verbose:
+        mem = compiled.memory_analysis()
+        print(f"== {arch} x {shape_name} mesh={tuple(mesh.shape.items())} "
+              f"vertical={vertical}/{vertical_mode}")
+        print(f"   lower {info['lower_s']}s compile {info['compile_s']}s")
+        print(f"   memory_analysis: {mem}")
+        print(f"   cost: flops={info['hlo_flops']:.3e} "
+              f"bytes={info['hlo_bytes']:.3e} "
+              f"collective_bytes={info['collective_bytes']:.3e}")
+        print(f"   collectives: {info['collectives']}")
+    return info
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true",
+                    help="run single-pod AND multi-pod")
+    ap.add_argument("--vertical", default="on", choices=["on", "off"])
+    ap.add_argument("--vertical-mode", default="flat", choices=["flat", "client"])
+    ap.add_argument("--merge", default=None)
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--remat-policy", default=None, choices=["dots"])
+    ap.add_argument("--shard-kv-seq", action="store_true")
+    ap.add_argument("--decode-chunks", type=int, default=None)
+    ap.add_argument("--kv-int8", action="store_true")
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--json", default=None, help="append results to this file")
+    args = ap.parse_args(argv)
+
+    pairs = []
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) else [args.shape]
+    for a in archs:
+        for s in shapes:
+            pairs.append((a, s))
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    results, failures = [], []
+    for a, s in pairs:
+        for mp in meshes:
+            try:
+                results.append(run_one(
+                    a, s, multi_pod=mp, vertical=args.vertical,
+                    vertical_mode=args.vertical_mode, merge=args.merge,
+                    fsdp=args.fsdp,
+                    remat=(args.remat_policy or (not args.no_remat)),
+                    shard_seq_over_model=args.shard_kv_seq,
+                    decode_chunks=args.decode_chunks,
+                    kv_quant=args.kv_int8,
+                    capacity_factor=args.capacity_factor, tag=args.tag))
+            except Exception as e:  # noqa: BLE001 — report all failures at end
+                print(f"!! FAIL {a} x {s} multi_pod={mp}: {type(e).__name__}: {e}")
+                failures.append((a, s, mp, str(e)))
+    if args.json:
+        existing = []
+        if os.path.exists(args.json):
+            existing = json.load(open(args.json))
+        json.dump(existing + results, open(args.json, "w"), indent=1)
+    print(f"\n{len(results)} ok, {len(failures)} failed")
+    for f in failures:
+        print("  FAILED:", f[:3])
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

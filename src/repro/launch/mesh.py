@@ -1,0 +1,44 @@
+"""Production meshes.
+
+``make_production_mesh`` is the contract required by the dry-run:
+single-pod (16, 16) = ("data", "model") — 256 chips — and multi-pod
+(2, 16, 16) = ("pod", "data", "model") — 512 chips.
+
+``make_client_factored_mesh`` is the paper-faithful layout: the model axis
+is factored into ("client", "tp") so every vertical-SplitNN client tower is
+communication-isolated inside its own device group (DESIGN.md §2).
+
+Both are FUNCTIONS so importing this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_client_factored_mesh(*, num_clients: int = 4, multi_pod: bool = False):
+    """Factor the 16-wide model axis into (client, tp)."""
+    assert 16 % num_clients == 0, num_clients
+    tp = 16 // num_clients
+    if multi_pod:
+        return jax.make_mesh((2, 16, num_clients, tp), ("pod", "data", "client", "tp"))
+    return jax.make_mesh((16, num_clients, tp), ("data", "client", "tp"))
+
+
+def make_host_mesh(*, data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, n // data)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# TPU v5e hardware constants used by the roofline analysis
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link

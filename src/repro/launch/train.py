@@ -1,0 +1,109 @@
+"""End-to-end training launcher.
+
+Examples:
+  # ~100M-param vertical-split LM for a few hundred steps (deliverable b):
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \\
+      --scale 100m --steps 300 --batch 8 --seq 256
+
+  # any assigned arch, reduced, quick sanity:
+  PYTHONPATH=src python -m repro.launch.train --arch zamba2-7b --reduced \\
+      --steps 20 --batch 2 --seq 64
+
+  # centralized baseline (paper Table 2 comparison):
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --scale 100m \\
+      --vertical off --steps 300
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import VerticalConfig, get_arch
+from repro.data.loader import LMBatchLoader
+from repro.train.loop import train
+
+
+def scale_config(cfg, scale: str):
+    """Budget presets: shrink depth/width, keep the family + technique."""
+    if scale == "full":
+        return cfg
+    presets = {
+        # ~100M params with the smollm tokenizer (embed ~38M + 12 layers)
+        "100m": dict(num_layers=12, d_model=768, num_heads=12, num_kv_heads=4,
+                     d_ff=2048),
+        "25m": dict(num_layers=6, d_model=384, num_heads=6, num_kv_heads=2,
+                    d_ff=1024),
+        "10m": dict(num_layers=4, d_model=256, num_heads=4, num_kv_heads=2,
+                    d_ff=512),
+    }
+    if scale not in presets:
+        raise SystemExit(f"unknown --scale {scale}")
+    fields = dict(presets[scale])
+    if cfg.family in ("ssm", "hybrid"):
+        fields.pop("num_heads", None)
+        fields.pop("num_kv_heads", None)
+        fields.pop("d_ff", None) if cfg.family == "ssm" else None
+    return dataclasses.replace(cfg, **fields)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--scale", default="full",
+                    choices=["full", "100m", "25m", "10m"])
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-test reduced variant")
+    ap.add_argument("--vertical", default="on", choices=["on", "off"])
+    ap.add_argument("--merge", default=None,
+                    help="override the cut-layer merge strategy")
+    ap.add_argument("--clients", type=int, default=None)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--json", default=None, help="write metrics json here")
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    cfg = scale_config(cfg, args.scale)
+    if args.vertical == "off":
+        cfg = cfg.with_vertical(None)
+    elif args.merge or args.clients:
+        v = cfg.vertical or VerticalConfig()
+        v = dataclasses.replace(
+            v,
+            merge=args.merge or v.merge,
+            num_clients=args.clients or v.num_clients,
+        )
+        cfg = cfg.with_vertical(v)
+
+    from repro.models.backbone import param_count
+
+    n_params = param_count(cfg)
+    print(f"arch={cfg.name} family={cfg.family} params={n_params/1e6:.1f}M "
+          f"vertical={cfg.vertical}")
+    loader = LMBatchLoader(cfg, args.batch, args.seq, seed=args.seed)
+    params, metrics = train(
+        cfg, loader, steps=args.steps, learning_rate=args.lr,
+        checkpoint_path=args.checkpoint, seed=args.seed,
+    )
+    summary = metrics.summary()
+    summary.update(arch=cfg.name, params=n_params, steps=args.steps,
+                   vertical=args.vertical)
+    print(json.dumps(summary, indent=1))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"summary": summary, "losses": metrics.losses}, f)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,2 @@
+"""Model substrate: layers, attention, MoE, Mamba2, transformer stacks,
+architecture assembly (backbone), modality frontends (stubs)."""

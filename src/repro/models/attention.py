@@ -1,0 +1,385 @@
+"""Attention: GQA (+optional qk-norm), chunked-flash prefill, cached decode,
+sliding-window, and cross-attention.
+
+The chunked ("lax-flash") path is the pure-JAX oracle of the Pallas
+``flash_attention`` kernel and is what the model stack lowers on any backend;
+the Pallas kernel is the TPU-target hot path (see repro.kernels).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_attention(
+    key,
+    d_model: int,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    *,
+    qk_norm: bool = False,
+    dtype=jnp.float32,
+):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": layers.dense_init(k1, d_model, n_heads * head_dim, dtype),
+        "wk": layers.dense_init(k2, d_model, n_kv_heads * head_dim, dtype),
+        "wv": layers.dense_init(k3, d_model, n_kv_heads * head_dim, dtype),
+        "wo": layers.dense_init(k4, n_heads * head_dim, d_model, dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = layers.init_rmsnorm(head_dim, dtype)
+        p["k_norm"] = layers.init_rmsnorm(head_dim, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# core attention math
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q, k):
+    """q: (B, Sq, Kv, rep, hd), k: (B, Skv, Kv, hd) -> (B, Kv, rep, Sq, Skv)."""
+    return jnp.einsum("bqgrd,bkgd->bgrqk", q, k, preferred_element_type=jnp.float32)
+
+
+def _gqa_values(probs, v):
+    """probs: (B, Kv, rep, Sq, Skv), v: (B, Skv, Kv, hd) -> (B, Sq, Kv, rep, hd)."""
+    return jnp.einsum("bgrqk,bkgd->bqgrd", probs, v.astype(probs.dtype))
+
+
+def dense_attention(
+    q,  # (B, Sq, H, hd)
+    k,  # (B, Skv, Kv, hd)
+    v,  # (B, Skv, Kv, hd)
+    *,
+    causal: bool,
+    q_positions,  # (Sq,) or (B, Sq)
+    kv_positions,  # (Skv,) or (B, Skv)
+    kv_valid=None,  # optional (B, Skv) bool — cache-validity mask
+    window: Optional[int] = None,
+):
+    """Unblocked reference attention (used for short sequences and decode)."""
+    B, Sq, H, hd = q.shape
+    Kv = k.shape[2]
+    rep = H // Kv
+    qg = q.reshape(B, Sq, Kv, rep, hd)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    scores = _gqa_scores(qg, k) * scale  # (B, Kv, rep, Sq, Skv) f32
+
+    qpos = jnp.broadcast_to(jnp.asarray(q_positions), (B, Sq)) if jnp.ndim(q_positions) == 1 else q_positions
+    kpos = jnp.broadcast_to(jnp.asarray(kv_positions), (B, k.shape[1])) if jnp.ndim(kv_positions) == 1 else kv_positions
+    mask = jnp.ones((B, Sq, k.shape[1]), dtype=bool)
+    if causal:
+        mask &= qpos[:, :, None] >= kpos[:, None, :]
+    if window is not None:
+        mask &= qpos[:, :, None] - kpos[:, None, :] < window
+    if kv_valid is not None:
+        mask &= kv_valid[:, None, :]
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_values(probs, v)  # (B, Sq, Kv, rep, hd)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def chunked_flash_attention(
+    q,  # (B, Sq, H, hd)
+    k,  # (B, Skv, Kv, hd)
+    v,
+    *,
+    causal: bool,
+    q_positions,  # (Sq,)
+    kv_positions,  # (Skv,)
+    window: Optional[int] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+):
+    """Two-level blocked attention with online softmax (O(chunk^2) memory).
+
+    This is the lowering-friendly path for 32k/500k sequences: activations for
+    the (Sq x Skv) score matrix are never materialized.
+    """
+    B, Sq, H, hd = q.shape
+    Skv, Kv = k.shape[1], k.shape[2]
+    rep = H // Kv
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    assert Sq % q_chunk == 0 and Skv % kv_chunk == 0, (Sq, q_chunk, Skv, kv_chunk)
+    nq, nk = Sq // q_chunk, Skv // kv_chunk
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+
+    qpos = jnp.asarray(q_positions).reshape(nq, q_chunk)
+    kpos = jnp.asarray(kv_positions).reshape(nk, kv_chunk)
+    qg = q.reshape(B, nq, q_chunk, Kv, rep, hd)
+    kg = k.reshape(B, nk, kv_chunk, Kv, hd)
+    vg = v.reshape(B, nk, kv_chunk, Kv, hd)
+
+    def q_step(_, qi):
+        q_blk = qg[:, qi]  # (B, Cq, Kv, rep, hd)
+        qp = qpos[qi]  # (Cq,)
+
+        def kv_step(carry, ki):
+            acc, m, l = carry
+            k_blk, v_blk, kp = kg[:, ki], vg[:, ki], kpos[ki]
+            s = _gqa_scores(q_blk, k_blk) * scale  # (B, Kv, rep, Cq, Ck) f32
+            mask = jnp.ones((q_chunk, kv_chunk), dtype=bool)
+            if causal:
+                mask &= qp[:, None] >= kp[None, :]
+            if window is not None:
+                mask &= qp[:, None] - kp[None, :] < window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bgrqk,bkgd->bgrqd", p, v_blk.astype(jnp.float32)
+            )
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, Kv, rep, q_chunk, hd), jnp.float32)
+        m0 = jnp.full((B, Kv, rep, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Kv, rep, q_chunk), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0), jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)  # (B, Kv, rep, Cq, hd)
+        out = jnp.moveaxis(out, 3, 1)  # (B, Cq, Kv, rep, hd)
+        return None, out.astype(q.dtype)
+
+    _, chunks = jax.lax.scan(q_step, None, jnp.arange(nq))  # (nq, B, Cq, Kv, rep, hd)
+    out = jnp.moveaxis(chunks, 0, 1).reshape(B, Sq, H, hd)
+    return out
+
+
+FLASH_THRESHOLD = 2048
+
+
+def _pick_chunk(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (chunking must tile exactly)."""
+    for c in range(min(target, n), 0, -1):
+        if n % c == 0:
+            return c
+    return 1
+
+
+def attention_apply(
+    params,
+    x,  # (B, S, d_model)
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    causal: bool = True,
+    positions=None,  # (S,) int32
+    rope_theta: Optional[float] = 10000.0,
+    qk_norm_eps: float = 1e-6,
+    window: Optional[int] = None,
+    kv_override=None,  # (k, v, kv_positions) for cross-attention
+):
+    """Full-sequence attention (train / prefill)."""
+    B, S, _ = x.shape
+    q = (x @ params["wq"]).reshape(B, S, n_heads, head_dim)
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    if kv_override is None:
+        k = (x @ params["wk"]).reshape(B, S, n_kv_heads, head_dim)
+        v = (x @ params["wv"]).reshape(B, S, n_kv_heads, head_dim)
+        kv_positions = positions
+    else:
+        k, v, kv_positions = kv_override
+    if "q_norm" in params:
+        q = layers.rmsnorm(params["q_norm"], q, qk_norm_eps)
+        k = layers.rmsnorm(params["k_norm"], k, qk_norm_eps)
+    if rope_theta is not None and kv_override is None:
+        q = layers.apply_rope(q, positions, rope_theta)
+        k = layers.apply_rope(k, kv_positions, rope_theta)
+    elif rope_theta is not None:
+        q = layers.apply_rope(q, positions, rope_theta)
+
+    Skv = k.shape[1]
+    if S * Skv <= FLASH_THRESHOLD * FLASH_THRESHOLD:
+        out = dense_attention(
+            q, k, v, causal=causal, q_positions=positions,
+            kv_positions=kv_positions, window=window,
+        )
+    else:
+        out = chunked_flash_attention(
+            q, k, v, causal=causal, q_positions=positions,
+            kv_positions=kv_positions, window=window,
+            q_chunk=_pick_chunk(S, 512), kv_chunk=_pick_chunk(Skv, 512),
+        )
+    return out.reshape(B, S, n_heads * head_dim) @ params["wo"], (k, v)
+
+
+def quantize_kv(x, axis=-1):
+    """Per-vector symmetric int8 quantization: returns (q_int8, scale_f32).
+    x: (..., hd); scale shape (..., 1)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_kv(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def decode_attention_apply(
+    params,
+    x,  # (B, 1, d_model)
+    cache_k,  # (B, S_cache, Kv, hd) — bf16/f32, or int8 when quantized
+    cache_v,
+    cache_index,  # scalar int32: number of valid entries / write position
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: Optional[float] = 10000.0,
+    position=None,  # scalar absolute position (defaults to cache_index)
+    window: Optional[int] = None,
+    ring: bool = False,  # ring-buffer cache (sliding window)
+    kv_positions=None,  # (S_cache,) absolute positions of cache slots (ring)
+    cross: bool = False,  # cross-attention: read-only cache, no RoPE on k
+    decode_chunks: Optional[int] = None,  # flash-decoding chunk count
+    chunk_sharding=None,  # sharding constraint for the chunked cache view
+    kv_scales=None,  # (k_scale, v_scale): (B, S_cache, Kv, 1) — int8 cache
+):
+    """One-token cached decode. Returns (attn_out, new_k, new_v)."""
+    B, _, _ = x.shape
+    S_cache = cache_k.shape[1]
+    if position is None:
+        position = cache_index
+    pos_arr = jnp.asarray(position, jnp.int32).reshape(1)
+
+    q = (x @ params["wq"]).reshape(B, 1, n_heads, head_dim)
+    if "q_norm" in params:
+        q = layers.rmsnorm(params["q_norm"], q)
+    if rope_theta is not None:
+        q = layers.apply_rope(q, pos_arr, rope_theta)
+
+    if cross:
+        new_scales = None
+        new_k, new_v = cache_k, cache_v
+        kpos = (
+            jnp.arange(S_cache, dtype=jnp.int32)
+            if kv_positions is None
+            else kv_positions
+        )
+        kv_valid = None
+    else:
+        k_new = (x @ params["wk"]).reshape(B, 1, n_kv_heads, head_dim)
+        v_new = (x @ params["wv"]).reshape(B, 1, n_kv_heads, head_dim)
+        if "k_norm" in params:
+            k_new = layers.rmsnorm(params["k_norm"], k_new)
+        if rope_theta is not None:
+            k_new = layers.apply_rope(k_new, pos_arr, rope_theta)
+        slot = jnp.mod(cache_index, S_cache) if ring else cache_index
+        new_scales = None
+        if kv_scales is not None:
+            k_q, k_s = quantize_kv(k_new)
+            v_q, v_s = quantize_kv(v_new)
+            new_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_q, slot, axis=1)
+            new_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_q, slot, axis=1)
+            new_scales = (
+                jax.lax.dynamic_update_slice_in_dim(kv_scales[0], k_s, slot, axis=1),
+                jax.lax.dynamic_update_slice_in_dim(kv_scales[1], v_s, slot, axis=1),
+            )
+        else:
+            new_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new.astype(cache_k.dtype), slot, axis=1)
+            new_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new.astype(cache_v.dtype), slot, axis=1)
+        if kv_positions is None:
+            raise ValueError("cached decode requires tracked kv_positions")
+        # tracked positions: unwritten slots stay -1 and are masked invalid,
+        # so a cache prefilled from an arbitrary offset (VLM vision prefix,
+        # ring buffers) is always consistent
+        kpos = jax.lax.dynamic_update_slice_in_dim(
+            kv_positions, pos_arr, slot, axis=0
+        )
+        kv_valid = ((kpos >= 0) & (kpos <= position))[None, :]
+        kv_valid = jnp.broadcast_to(kv_valid, (B, S_cache))
+
+    if decode_chunks and not cross:
+        out = chunked_decode_attention(
+            q, new_k, new_v, kpos, position, n_chunks=decode_chunks,
+            window=window, chunk_sharding=chunk_sharding,
+            kv_scales=new_scales,
+        )
+    else:
+        k_use, v_use = new_k, new_v
+        if new_scales is not None:
+            k_use = dequantize_kv(new_k, new_scales[0]).astype(q.dtype)
+            v_use = dequantize_kv(new_v, new_scales[1]).astype(q.dtype)
+        out = dense_attention(
+            q,
+            k_use,
+            v_use,
+            causal=not cross,
+            q_positions=pos_arr,
+            kv_positions=kpos,
+            kv_valid=kv_valid,
+            window=window,
+        )
+    attn = out.reshape(B, 1, n_heads * head_dim) @ params["wo"]
+    if cross:
+        return attn, cache_k, cache_v, kpos, None
+    return attn, new_k, new_v, kpos, new_scales
+
+
+def chunked_decode_attention(q, k, v, kv_positions, position, *,
+                             n_chunks: int, window=None, chunk_sharding=None,
+                             kv_scales=None):
+    """Flash-decoding layout: the KV sequence dim is split into ``n_chunks``
+    blocks (shardable over the model axis — each device reads ONLY its local
+    cache slice), each block computes a partial softmax, and the partials
+    combine with a log-sum-exp reduction whose traffic is O(heads), not
+    O(seq).  q: (B, 1, H, hd), k/v: (B, S, Kv, hd).  Returns (B, 1, H, hd).
+    """
+    B, S, Kv, hd = k.shape
+    H = q.shape[2]
+    rep = H // Kv
+    assert S % n_chunks == 0, (S, n_chunks)
+    Sc = S // n_chunks
+    kc = k.reshape(B, n_chunks, Sc, Kv, hd)
+    vc = v.reshape(B, n_chunks, Sc, Kv, hd)
+    if chunk_sharding is not None:
+        kc = jax.lax.with_sharding_constraint(kc, chunk_sharding)
+        vc = jax.lax.with_sharding_constraint(vc, chunk_sharding)
+    if kv_scales is not None:
+        ks = kv_scales[0].reshape(B, n_chunks, Sc, Kv, 1)
+        vs = kv_scales[1].reshape(B, n_chunks, Sc, Kv, 1)
+        kc = dequantize_kv(kc, ks).astype(q.dtype)
+        vc = dequantize_kv(vc, vs).astype(q.dtype)
+    pc = kv_positions.reshape(n_chunks, Sc)
+
+    qg = q.reshape(B, Kv, rep, hd)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    # scores per chunk: (B, nc, Kv, rep, Sc) — chunk dim stays sharded
+    s = jnp.einsum("bgrd,bcsgd->bcgrs", qg, kc,
+                   preferred_element_type=jnp.float32) * scale
+    valid = (pc >= 0) & (pc <= position)
+    if window is not None:
+        valid &= pc > position - window
+    s = jnp.where(valid[None, :, None, None, :], s, NEG_INF)
+    m_c = jnp.max(s, axis=-1)  # (B, nc, Kv, rep)
+    p = jnp.exp(s - m_c[..., None])
+    # zero fully-masked chunks (their m_c is NEG_INF)
+    alive = jnp.any(valid, axis=-1)[None, :, None, None]
+    p = jnp.where(alive[..., None], p, 0.0)
+    num_c = jnp.einsum("bcgrs,bcsgd->bcgrd", p, vc.astype(jnp.float32))
+    den_c = jnp.sum(p, axis=-1)  # (B, nc, Kv, rep)
+
+    m = jnp.max(m_c, axis=1, keepdims=True)  # (B, 1, Kv, rep)
+    w = jnp.where(alive, jnp.exp(m_c - m), 0.0)
+    num = jnp.sum(num_c * w[..., None], axis=1)  # (B, Kv, rep, hd)
+    den = jnp.maximum(jnp.sum(den_c * w, axis=1), 1e-30)
+    out = num / den[..., None]
+    return out.reshape(B, 1, H, hd).astype(q.dtype)

@@ -1,0 +1,837 @@
+"""Architecture assembly: params, forward, caches, decode — for all families,
+with the paper's vertical-SplitNN towers as a first-class option.
+
+Public surface:
+  init_params(cfg, key, dtype)            -> param pytree
+  forward(params, batch, cfg, ...)        -> (logits, aux_loss)
+  init_cache(cfg, batch, cache_len, dtype)-> decode cache pytree
+  decode_step(params, cache, tokens, cfg) -> (logits, new_cache)
+  input_specs(cfg, shape, ...)            -> ShapeDtypeStructs for the dry-run
+
+Vertical split (cfg.vertical != None): the first ``tower_layers`` layers run
+as K independent client towers over d_model/K feature slices; tower outputs
+are merged (cfg.vertical.merge) at the cut layer; the remaining layers form
+the server network.  For audio the towers sit on the encoder (mel-band
+groups); for VLM the clients are the modalities and the merge is the
+sequence concatenation (the by-source split of the paper).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape, VerticalConfig
+from repro.core import compression as comp_lib
+from repro.core import merge as merge_lib
+from repro.models import frontend, layers
+from repro.models import transformer as tfm
+from repro.models.transformer import BlockDims
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _tower_dims(cfg: ArchConfig) -> BlockDims:
+    return BlockDims.from_arch(cfg).scaled(cfg.vertical.num_clients)
+
+
+def _cut_dim(cfg: ArchConfig) -> int:
+    v = cfg.vertical
+    if v.merge == "concat":
+        assert cfg.d_model % v.num_clients == 0
+        return cfg.d_model // v.num_clients
+    return cfg.d_model
+
+
+def _tower_ssm_d(cfg: ArchConfig) -> int:
+    return cfg.d_model // cfg.vertical.num_clients
+
+
+def _server_layers(cfg: ArchConfig) -> int:
+    if cfg.vertical is None or cfg.family in ("vlm",):
+        return cfg.num_layers if cfg.vertical is None else cfg.num_layers - cfg.vertical.tower_layers
+    return cfg.num_layers - cfg.vertical.tower_layers
+
+
+def _uses_feature_towers(cfg: ArchConfig) -> bool:
+    """Feature-slice towers (LM families + audio encoder); VLM uses modality towers."""
+    return cfg.vertical is not None and cfg.family != "vlm"
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_family_block(cfg: ArchConfig, dims: BlockDims, dtype, *, server: bool):
+    """Returns init_one(key) for the family's (server or tower) block."""
+    if cfg.family in ("dense", "vlm"):
+        return lambda k: tfm.init_dense_block(k, dims, dtype)
+    if cfg.family == "moe":
+        if server:
+            return lambda k: tfm.init_moe_block(k, dims, cfg.moe, dtype)
+        # towers stay dense: experts live on the role-0 server (paper §4.4)
+        return lambda k: tfm.init_dense_block(k, dims, dtype)
+    if cfg.family == "ssm":
+        d = dims.d_model
+        return lambda k: tfm.init_mamba_block(k, d, cfg.ssm, dtype)
+    if cfg.family == "hybrid":
+        d = dims.d_model
+        return lambda k: tfm.init_mamba_block(k, d, cfg.ssm, dtype)
+    if cfg.family == "audio":
+        return lambda k: tfm.init_dense_block(k, dims, dtype)
+    raise ValueError(cfg.family)
+
+
+def _init_towers(cfg: ArchConfig, key, dtype):
+    """Feature-slice towers, vmapped over clients: (K, L_t, ...) params."""
+    v = cfg.vertical
+    K, Lt = v.num_clients, v.tower_layers
+    d_slice = cfg.d_model // K
+    cut = _cut_dim(cfg)
+    if cfg.family in ("ssm", "hybrid"):
+        d_t = _tower_ssm_d(cfg)
+        dims_t = None
+    else:
+        dims_t = _tower_dims(cfg)
+        d_t = dims_t.d_model
+
+    k_in, k_tw, k_out = jax.random.split(key, 3)
+
+    def init_client(ck):
+        c_in, c_tw, c_out = jax.random.split(ck, 3)
+        if cfg.family in ("ssm", "hybrid"):
+            blocks = tfm.init_stacked(
+                lambda kk: tfm.init_mamba_block(kk, d_t, cfg.ssm, dtype), c_tw, Lt
+            )
+        else:
+            blocks = tfm.init_stacked(
+                _init_family_block(cfg, dims_t, dtype, server=False), c_tw, Lt
+            )
+        return {
+            "proj_in": layers.dense_init(c_in, d_slice, d_t, dtype),
+            "blocks": blocks,
+            "proj_out": layers.dense_init(c_out, d_t, cut, dtype),
+        }
+
+    return jax.vmap(init_client)(jax.random.split(k_tw, K))
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    dims = BlockDims.from_arch(cfg)
+    p: dict = {
+        "embed": layers.init_embedding(ks[0], cfg.vocab_size, cfg.d_model, dtype,
+                                       tie=cfg.tie_embeddings),
+        "final_norm": tfm._init_norm(cfg.d_model, dims.norm, dtype),
+    }
+    n_server = _server_layers(cfg)
+
+    if cfg.family in ("dense", "vlm"):
+        p["server"] = tfm.init_stacked(
+            lambda k: tfm.init_dense_block(k, dims, dtype), ks[1], n_server
+        )
+    elif cfg.family == "moe":
+        n_dense = cfg.moe.first_dense_layers
+        if cfg.vertical is not None:
+            n_dense = max(0, n_dense - cfg.vertical.tower_layers)
+        n_moe = n_server - n_dense
+        if n_dense:
+            dense_dims = BlockDims.from_arch(cfg)
+            # deepseek's dense layer uses a wider FFN (~= top_k * expert ff)
+            dense_dims = BlockDims(**{**dense_dims.__dict__,
+                                      "d_ff": cfg.d_ff * max(cfg.moe.top_k, 1)})
+            p["server_dense"] = tfm.init_stacked(
+                lambda k: tfm.init_dense_block(k, dense_dims, dtype), ks[2], n_dense
+            )
+        p["server"] = tfm.init_stacked(
+            lambda k: tfm.init_moe_block(k, dims, cfg.moe, dtype), ks[1], n_moe
+        )
+    elif cfg.family == "ssm":
+        p["server"] = tfm.init_stacked(
+            lambda k: tfm.init_mamba_block(k, cfg.d_model, cfg.ssm, dtype),
+            ks[1], n_server,
+        )
+    elif cfg.family == "hybrid":
+        n_super, n_tail = tfm.hybrid_layout(n_server, cfg.hybrid.shared_attn_every)
+        every = cfg.hybrid.shared_attn_every
+
+        def init_group(k):
+            return tfm.init_stacked(
+                lambda kk: tfm.init_mamba_block(kk, cfg.d_model, cfg.ssm, dtype),
+                k, every,
+            )
+
+        p["server_super"] = (
+            jax.vmap(init_group)(jax.random.split(ks[1], n_super)) if n_super else None
+        )
+        p["server_tail"] = tfm.init_stacked(
+            lambda kk: tfm.init_mamba_block(kk, cfg.d_model, cfg.ssm, dtype),
+            ks[2], n_tail,
+        )
+        p["shared_attn"] = tfm.init_dense_block(ks[3], dims, dtype)
+    elif cfg.family == "audio":
+        enc_layers = cfg.encdec.encoder_layers
+        if cfg.vertical is not None:
+            enc_layers = enc_layers - cfg.vertical.tower_layers
+        p["encoder"] = tfm.init_stacked(
+            lambda k: tfm.init_dense_block(k, dims, dtype), ks[1], enc_layers
+        )
+        p["enc_final_norm"] = tfm._init_norm(cfg.d_model, dims.norm, dtype)
+        p["decoder"] = tfm.init_stacked(
+            lambda k: tfm.init_dense_block(k, dims, dtype, cross=True),
+            ks[2], cfg.num_layers,
+        )
+    else:
+        raise ValueError(cfg.family)
+
+    if cfg.vertical is not None:
+        if cfg.family == "vlm":
+            # modality towers: one per client source (vision, text)
+            kv, kt = jax.random.split(ks[4])
+            Lt = cfg.vertical.tower_layers
+            p["vision_tower"] = tfm.init_stacked(
+                lambda k: tfm.init_dense_block(k, dims, dtype), kv, Lt
+            )
+            p["text_tower"] = tfm.init_stacked(
+                lambda k: tfm.init_dense_block(k, dims, dtype), kt, Lt
+            )
+        else:
+            p["towers"] = _init_towers(cfg, ks[4], dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# vertical tower forward (full sequence)
+# ---------------------------------------------------------------------------
+
+def _towers_forward(params, x, cfg: ArchConfig, *, positions, live_mask=None,
+                    causal: bool = True, remat: bool = False):
+    """x: (B, S, d_model) -> merged cut activation (B, S, d_model)."""
+    v = cfg.vertical
+    K = v.num_clients
+    x_slices = jnp.stack(jnp.split(x, K, axis=-1))  # (K, B, S, d/K)
+
+    if cfg.family in ("ssm", "hybrid"):
+        def run_tower(tp, xk):
+            h = xk @ tp["proj_in"]
+            h = tfm.mamba_stack_apply(tp["blocks"], h, cfg.ssm,
+                                      tp["proj_in"].shape[1], cfg.norm_eps,
+                                      remat=remat)
+            return h @ tp["proj_out"]
+    else:
+        dims_t = _tower_dims(cfg)
+
+        def run_tower(tp, xk):
+            h = xk @ tp["proj_in"]
+            h = tfm.dense_stack_apply(tp["blocks"], h, dims_t, causal=causal,
+                                      positions=positions, remat=remat)
+            return h @ tp["proj_out"]
+
+    cuts = jax.vmap(run_tower)(params["towers"], x_slices)  # (K, B, S, cut)
+    cuts = comp_lib.apply_compression(cuts, v.compression, v.topk_fraction)
+    return merge_lib.merge_stacked(cuts, v.merge, live_mask=live_mask)
+
+
+def _towers_decode(params, x, tower_cache, index, kv_positions, cfg: ArchConfig,
+                   *, window=None, ring=False, position=None, live_mask=None):
+    """One-token tower pass. x: (B, 1, d).  Returns (merged, new_tower_cache)."""
+    v = cfg.vertical
+    K = v.num_clients
+    x_slices = jnp.stack(jnp.split(x, K, axis=-1))  # (K, B, 1, d/K)
+
+    if cfg.family in ("ssm", "hybrid"):
+        def run_tower(tp, xk, ss, cs):
+            h = xk @ tp["proj_in"]
+            h, ns, nc = tfm.mamba_stack_decode(
+                tp["blocks"], h, ss, cs, cfg.ssm, tp["proj_in"].shape[1],
+                cfg.norm_eps,
+            )
+            return h @ tp["proj_out"], ns, nc
+
+        cuts, nss, ncs = jax.vmap(run_tower)(
+            params["towers"], x_slices, tower_cache["ssm"], tower_cache["conv"]
+        )
+        new_cache = {"ssm": nss, "conv": ncs}
+    else:
+        dims_t = _tower_dims(cfg)
+
+        def run_tower(tp, xk, ck, cv):
+            h = xk @ tp["proj_in"]
+            h, nk, nv, npos, _ = tfm.dense_stack_decode(
+                tp["blocks"], h, ck, cv, index, kv_positions, dims_t,
+                window=window, ring=ring, position=position,
+            )
+            return h @ tp["proj_out"], nk, nv
+
+        cuts, nk, nv = jax.vmap(run_tower)(
+            params["towers"], x_slices, tower_cache["k"], tower_cache["v"]
+        )
+        new_cache = {"k": nk, "v": nv}
+
+    cuts = comp_lib.apply_compression(cuts, v.compression, v.topk_fraction)
+    merged = merge_lib.merge_stacked(cuts, v.merge, live_mask=live_mask)
+    return merged, new_cache
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def forward(params, batch, cfg: ArchConfig, *, live_mask=None, window=None,
+            remat=False):
+    """Returns (logits, aux_loss).
+
+    batch: {"tokens": (B, S)} plus "frames" (audio) / "patches" (vlm).
+    """
+    dims = BlockDims.from_arch(cfg)
+    aux = jnp.zeros((), jnp.float32)
+
+    if cfg.family == "audio":
+        return _forward_audio(params, batch, cfg, dims, live_mask, remat=remat)
+
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(params["embed"]["table"].dtype)
+        text = layers.embed(params["embed"], tokens)
+        Sv = patches.shape[1]
+        full_pos = jnp.arange(Sv + S, dtype=jnp.int32)
+        if cfg.vertical is not None:
+            vis = tfm.dense_stack_apply(params["vision_tower"], patches, dims,
+                                        causal=False, positions=full_pos[:Sv],
+                                        remat=remat)
+            txt = tfm.dense_stack_apply(params["text_tower"], text, dims,
+                                        causal=True, positions=full_pos[Sv:],
+                                        remat=remat)
+            if live_mask is not None:
+                # modality drop: zero the dropped client's sequence segment
+                vis = vis * live_mask[0]
+                txt = txt * live_mask[1]
+            x = jnp.concatenate([vis, txt], axis=1)  # sequence-concat merge
+        else:
+            x = jnp.concatenate([patches, text], axis=1)
+        x = tfm.dense_stack_apply(params["server"], x, dims, causal=True,
+                                  positions=full_pos, window=window,
+                                  remat=remat)
+        x = tfm._norm(params["final_norm"], x, dims.norm, dims.norm_eps)
+        logits = layers.unembed(params["embed"], x[:, Sv:, :])
+        return logits, aux
+
+    x = layers.embed(params["embed"], tokens)
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    if _uses_feature_towers(cfg):
+        x = _towers_forward(params, x, cfg, positions=positions,
+                            live_mask=live_mask, remat=remat)
+
+    if cfg.family == "dense":
+        x = tfm.dense_stack_apply(params["server"], x, dims, causal=True,
+                                  positions=positions, window=window,
+                                  remat=remat)
+    elif cfg.family == "moe":
+        if "server_dense" in params:
+            dense_dims = BlockDims(**{**dims.__dict__,
+                                      "d_ff": cfg.d_ff * max(cfg.moe.top_k, 1)})
+            x = tfm.dense_stack_apply(params["server_dense"], x, dense_dims,
+                                      causal=True, positions=positions,
+                                      window=window, remat=remat)
+        x, aux = tfm.moe_stack_apply(params["server"], x, dims, cfg.moe,
+                                     positions=positions, window=window,
+                                     remat=remat)
+    elif cfg.family == "ssm":
+        x = tfm.mamba_stack_apply(params["server"], x, cfg.ssm, cfg.d_model,
+                                  cfg.norm_eps, remat=remat)
+    elif cfg.family == "hybrid":
+        x = tfm.hybrid_stack_apply(
+            params["server_super"], params["server_tail"], params["shared_attn"],
+            x, cfg.ssm, dims, positions=positions, window=window, remat=remat,
+        )
+    else:
+        raise ValueError(cfg.family)
+
+    x = tfm._norm(params["final_norm"], x, dims.norm, dims.norm_eps)
+    return layers.unembed(params["embed"], x), aux
+
+
+def encode_audio(params, frames, cfg: ArchConfig, *, live_mask=None,
+                 remat=False):
+    """Whisper encoder (towers + server encoder layers) -> (B, S_enc, d)."""
+    dims = BlockDims.from_arch(cfg)
+    frames = frames.astype(params["embed"]["table"].dtype)
+    S_enc = frames.shape[1]
+    enc_pos = layers.sinusoidal_positions(S_enc, cfg.d_model, frames.dtype)
+    h = frames + enc_pos[None]
+    enc_positions = jnp.arange(S_enc, dtype=jnp.int32)
+    if cfg.vertical is not None:
+        h = _towers_forward(params, h, cfg, positions=enc_positions,
+                            live_mask=live_mask, causal=False, remat=remat)
+    if params["encoder"] is not None:
+        h = tfm.dense_stack_apply(params["encoder"], h, dims, causal=False,
+                                  positions=enc_positions, remat=remat)
+    return tfm._norm(params["enc_final_norm"], h, dims.norm, dims.norm_eps)
+
+
+def _forward_audio(params, batch, cfg: ArchConfig, dims: BlockDims, live_mask,
+                   remat=False):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    enc_out = encode_audio(params, batch["frames"], cfg, live_mask=live_mask,
+                           remat=remat)
+    S_enc = enc_out.shape[1]
+    enc_positions = jnp.arange(S_enc, dtype=jnp.int32)
+
+    x = layers.embed(params["embed"], tokens)
+    x = x + layers.sinusoidal_positions(S, cfg.d_model, x.dtype)[None]
+    dec_positions = jnp.arange(S, dtype=jnp.int32)
+
+    # cross k/v are shared per layer; computed inside the scan from enc_out
+    def body(h, lp):
+        kv = tfm.cross_kv_from_encoder(lp, enc_out, dims)
+        h = tfm.dense_block_apply(lp, h, dims, causal=True,
+                                  positions=dec_positions,
+                                  cross_kv=(kv[0], kv[1], enc_positions))
+        return h, None
+
+    body = tfm._maybe_checkpoint(body, remat)
+    x, _ = jax.lax.scan(body, x, params["decoder"])
+    x = tfm._norm(params["final_norm"], x, dims.norm, dims.norm_eps)
+    return layers.unembed(params["embed"], x), jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype=jnp.float32,
+               *, ring: bool = False, kv_quant: bool = False):
+    """Decode cache pytree.  cache_len = max sequence (or window for ring).
+    kv_quant (dense family): int8 KV + per-(slot, head) f32 scales."""
+    dims = BlockDims.from_arch(cfg)
+    hd = dims.head_dim
+    cache: dict = {
+        "index": jnp.zeros((), jnp.int32),
+        "kv_positions": jnp.zeros((cache_len,), jnp.int32) - 1,
+    }
+
+    def kv(n_layers, n_kv):
+        return jnp.zeros((n_layers, batch, cache_len, n_kv, hd), dtype)
+
+    n_server = _server_layers(cfg)
+
+    if cfg.family in ("dense", "vlm"):
+        if kv_quant and cfg.family == "dense":
+            cache["k"] = jnp.zeros(
+                (n_server, batch, cache_len, dims.n_kv_heads, hd), jnp.int8)
+            cache["v"] = jnp.zeros(
+                (n_server, batch, cache_len, dims.n_kv_heads, hd), jnp.int8)
+            cache["k_scale"] = jnp.zeros(
+                (n_server, batch, cache_len, dims.n_kv_heads, 1), jnp.float32)
+            cache["v_scale"] = jnp.zeros(
+                (n_server, batch, cache_len, dims.n_kv_heads, 1), jnp.float32)
+        else:
+            cache["k"] = kv(n_server, dims.n_kv_heads)
+            cache["v"] = kv(n_server, dims.n_kv_heads)
+    elif cfg.family == "moe":
+        n_dense = params_dense_layers(cfg)
+        n_moe = n_server - n_dense
+        if n_dense:
+            cache["dense_k"] = kv(n_dense, dims.n_kv_heads)
+            cache["dense_v"] = kv(n_dense, dims.n_kv_heads)
+        cache["k"] = kv(n_moe, dims.n_kv_heads)
+        cache["v"] = kv(n_moe, dims.n_kv_heads)
+    elif cfg.family == "ssm":
+        cache.update(_ssm_cache(cfg, n_server, batch, cfg.d_model, dtype))
+    elif cfg.family == "hybrid":
+        every = cfg.hybrid.shared_attn_every
+        n_super, n_tail = tfm.hybrid_layout(n_server, every)
+        H = cfg.ssm.n_heads(cfg.d_model)
+        P, N, W = cfg.ssm.head_dim, cfg.ssm.d_state, cfg.ssm.conv_width
+        ch = cfg.ssm.d_inner(cfg.d_model) + 2 * cfg.ssm.n_groups * cfg.ssm.d_state
+        if n_super:
+            cache["ssm_super"] = jnp.zeros((n_super, every, batch, H, P, N), jnp.float32)
+            cache["conv_super"] = jnp.zeros((n_super, every, batch, W - 1, ch), dtype)
+            cache["attn_k"] = kv(n_super, dims.n_kv_heads)
+            cache["attn_v"] = kv(n_super, dims.n_kv_heads)
+        if n_tail:
+            cache["ssm_tail"] = jnp.zeros((n_tail, batch, H, P, N), jnp.float32)
+            cache["conv_tail"] = jnp.zeros((n_tail, batch, W - 1, ch), dtype)
+    elif cfg.family == "audio":
+        cache["k"] = kv(cfg.num_layers, dims.n_kv_heads)
+        cache["v"] = kv(cfg.num_layers, dims.n_kv_heads)
+        S_enc = cfg.encdec.encoder_seq_len
+        cache["cross_k"] = jnp.zeros(
+            (cfg.num_layers, batch, S_enc, dims.n_kv_heads, hd), dtype
+        )
+        cache["cross_v"] = jnp.zeros(
+            (cfg.num_layers, batch, S_enc, dims.n_kv_heads, hd), dtype
+        )
+
+    # vertical towers (feature-slice families) keep their own caches
+    if _uses_feature_towers(cfg) and cfg.family != "audio":
+        v = cfg.vertical
+        K, Lt = v.num_clients, v.tower_layers
+        if cfg.family in ("ssm", "hybrid"):
+            d_t = _tower_ssm_d(cfg)
+            Ht = cfg.ssm.n_heads(d_t)
+            P, N, W = cfg.ssm.head_dim, cfg.ssm.d_state, cfg.ssm.conv_width
+            ch_t = cfg.ssm.d_inner(d_t) + 2 * cfg.ssm.n_groups * cfg.ssm.d_state
+            cache["tower"] = {
+                "ssm": jnp.zeros((K, Lt, batch, Ht, P, N), jnp.float32),
+                "conv": jnp.zeros((K, Lt, batch, W - 1, ch_t), dtype),
+            }
+        else:
+            dims_t = _tower_dims(cfg)
+            cache["tower"] = {
+                "k": jnp.zeros((K, Lt, batch, cache_len, dims_t.n_kv_heads, hd), dtype),
+                "v": jnp.zeros((K, Lt, batch, cache_len, dims_t.n_kv_heads, hd), dtype),
+            }
+    if cfg.family == "vlm" and cfg.vertical is not None:
+        dims_t = BlockDims.from_arch(cfg)
+        Lt = cfg.vertical.tower_layers
+        cache["text_tower_k"] = jnp.zeros(
+            (Lt, batch, cache_len, dims_t.n_kv_heads, hd), dtype
+        )
+        cache["text_tower_v"] = jnp.zeros(
+            (Lt, batch, cache_len, dims_t.n_kv_heads, hd), dtype
+        )
+        # the text tower never attends over the vision prefix: it tracks its
+        # own slot validity separately from the server cache
+        cache["text_tower_positions"] = jnp.zeros((cache_len,), jnp.int32) - 1
+    return cache
+
+
+def params_dense_layers(cfg: ArchConfig) -> int:
+    if cfg.family != "moe":
+        return 0
+    n = cfg.moe.first_dense_layers
+    if cfg.vertical is not None:
+        n = max(0, n - cfg.vertical.tower_layers)
+    return n
+
+
+def _ssm_cache(cfg, n_layers, batch, d_model, dtype):
+    H = cfg.ssm.n_heads(d_model)
+    P, N, W = cfg.ssm.head_dim, cfg.ssm.d_state, cfg.ssm.conv_width
+    ch = cfg.ssm.d_inner(d_model) + 2 * cfg.ssm.n_groups * cfg.ssm.d_state
+    return {
+        "ssm": jnp.zeros((n_layers, batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, W - 1, ch), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# decode step
+# ---------------------------------------------------------------------------
+
+def decode_step(params, cache, tokens, cfg: ArchConfig, *, window=None,
+                ring=False, live_mask=None, decode_chunks=None,
+                chunk_sharding=None):
+    """One-token decode. tokens: (B,) int32. Returns (logits (B, V), cache)."""
+    dims = BlockDims.from_arch(cfg)
+    index = cache["index"]
+    kv_positions = cache["kv_positions"]
+    position = index  # absolute position of the new token
+    x = layers.embed(params["embed"], tokens[:, None])  # (B, 1, d)
+    new_cache = dict(cache)
+
+    if cfg.family == "audio":
+        x = x + layers.sinusoidal_position_at(position, cfg.d_model, x.dtype)[None, None]
+
+    if cfg.family == "vlm":
+        # text towers first (positions offset by the vision prefix)
+        if cfg.vertical is not None:
+            h, tk, tv, tpos, _ = tfm.dense_stack_decode(
+                params["text_tower"], x, cache["text_tower_k"],
+                cache["text_tower_v"], index, cache["text_tower_positions"],
+                dims, window=window, ring=ring, position=position,
+            )
+            new_cache["text_tower_k"], new_cache["text_tower_v"] = tk, tv
+            new_cache["text_tower_positions"] = tpos
+            x = h
+        x, nk, nv, npos, _ = tfm.dense_stack_decode(
+            params["server"], x, cache["k"], cache["v"], index, kv_positions,
+            dims, window=window, ring=ring, position=position,
+        )
+        new_cache.update(k=nk, v=nv, kv_positions=npos, index=index + 1)
+        x = tfm._norm(params["final_norm"], x, dims.norm, dims.norm_eps)
+        return layers.unembed(params["embed"], x)[:, 0, :], new_cache
+
+    if _uses_feature_towers(cfg) and cfg.family != "audio":
+        x, ntc = _towers_decode(
+            params, x, cache["tower"], index, kv_positions, cfg,
+            window=window, ring=ring, position=position, live_mask=live_mask,
+        )
+        new_cache["tower"] = ntc
+
+    if cfg.family == "dense":
+        kv_scales = None
+        if "k_scale" in cache:
+            kv_scales = (cache["k_scale"], cache["v_scale"])
+        x, nk, nv, npos, nsc = tfm.dense_stack_decode(
+            params["server"], x, cache["k"], cache["v"], index, kv_positions,
+            dims, window=window, ring=ring, position=position,
+            decode_chunks=decode_chunks, chunk_sharding=chunk_sharding,
+            kv_scales=kv_scales,
+        )
+        new_cache.update(k=nk, v=nv, kv_positions=npos)
+        if nsc is not None:
+            new_cache.update(k_scale=nsc[0], v_scale=nsc[1])
+    elif cfg.family == "moe":
+        if "dense_k" in cache:
+            dense_dims = BlockDims(**{**dims.__dict__,
+                                      "d_ff": cfg.d_ff * max(cfg.moe.top_k, 1)})
+            x, dk, dv, _, _ = tfm.dense_stack_decode(
+                params["server_dense"], x, cache["dense_k"], cache["dense_v"],
+                index, kv_positions, dense_dims, window=window, ring=ring,
+                position=position,
+            )
+            new_cache.update(dense_k=dk, dense_v=dv)
+        x, nk, nv, npos = tfm.moe_stack_decode(
+            params["server"], x, cache["k"], cache["v"], index, kv_positions,
+            dims, cfg.moe, window=window, ring=ring, position=position,
+            decode_chunks=decode_chunks, chunk_sharding=chunk_sharding,
+        )
+        new_cache.update(k=nk, v=nv, kv_positions=npos)
+    elif cfg.family == "ssm":
+        x, ns, nc = tfm.mamba_stack_decode(
+            params["server"], x, cache["ssm"], cache["conv"], cfg.ssm,
+            cfg.d_model, cfg.norm_eps,
+        )
+        new_cache.update(ssm=ns, conv=nc)
+    elif cfg.family == "hybrid":
+        x, nss, ncs, nk, nv, nst, nct, npos = tfm.hybrid_stack_decode(
+            params["server_super"], params["server_tail"], params["shared_attn"],
+            x,
+            cache.get("ssm_super"), cache.get("conv_super"),
+            cache.get("attn_k"), cache.get("attn_v"),
+            cache.get("ssm_tail"), cache.get("conv_tail"),
+            index, kv_positions, cfg.ssm, dims,
+            window=window, ring=ring, position=position,
+        )
+        if nss is not None:
+            new_cache.update(ssm_super=nss, conv_super=ncs, attn_k=nk, attn_v=nv)
+            new_cache["kv_positions"] = npos
+        if nst is not None:
+            new_cache.update(ssm_tail=nst, conv_tail=nct)
+    elif cfg.family == "audio":
+        x, nk, nv, npos, _ = tfm.dense_stack_decode(
+            params["decoder"], x, cache["k"], cache["v"], index, kv_positions,
+            dims, window=window, ring=ring, position=position,
+            cross_caches=(cache["cross_k"], cache["cross_v"]),
+        )
+        new_cache.update(k=nk, v=nv, kv_positions=npos)
+    else:
+        raise ValueError(cfg.family)
+
+    new_cache["index"] = index + 1
+    x = tfm._norm(params["final_norm"], x, dims.norm, dims.norm_eps)
+    return layers.unembed(params["embed"], x)[:, 0, :], new_cache
+
+
+# ---------------------------------------------------------------------------
+# prefill (fill decode caches from a prompt / modality prefix)
+# ---------------------------------------------------------------------------
+
+def prefill_cross_attention(params, cache, frames, cfg: ArchConfig, *,
+                            live_mask=None):
+    """Whisper: encode audio once and populate the cross-attn K/V caches."""
+    dims = BlockDims.from_arch(cfg)
+    enc_out = encode_audio(params, frames, cfg, live_mask=live_mask)
+    B, S_enc, _ = enc_out.shape
+    # stacked per-layer cross K/V: (L, B, S_enc, Kv, hd)
+    wk = params["decoder"]["cross"]["wk"]  # (L, d, Kv*hd)
+    wv = params["decoder"]["cross"]["wv"]
+    L = wk.shape[0]
+    k = jnp.einsum("bsd,ldh->lbsh", enc_out, wk).reshape(
+        L, B, S_enc, dims.n_kv_heads, dims.head_dim
+    )
+    v = jnp.einsum("bsd,ldh->lbsh", enc_out, wv).reshape(
+        L, B, S_enc, dims.n_kv_heads, dims.head_dim
+    )
+    new_cache = dict(cache)
+    new_cache["cross_k"] = k.astype(cache["cross_k"].dtype)
+    new_cache["cross_v"] = v.astype(cache["cross_v"].dtype)
+    return new_cache
+
+
+def prefill_vision(params, cache, patches, cfg: ArchConfig):
+    """VLM: run the vision client tower + server layers over the vision
+    prefix, filling the server KV cache slots [0, Sv)."""
+    dims = BlockDims.from_arch(cfg)
+    x = patches.astype(params["embed"]["table"].dtype)
+    B, Sv, _ = x.shape
+    positions = jnp.arange(Sv, dtype=jnp.int32)
+    if cfg.vertical is not None:
+        x = tfm.dense_stack_apply(params["vision_tower"], x, dims,
+                                  causal=False, positions=positions)
+    _, ks, vs = tfm.dense_stack_prefill(params["server"], x, dims,
+                                        positions=positions, causal=True)
+    new_cache = dict(cache)
+    new_cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], ks.astype(cache["k"].dtype), 0, axis=2
+    )
+    new_cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], vs.astype(cache["v"].dtype), 0, axis=2
+    )
+    new_cache["kv_positions"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["kv_positions"], positions, 0, axis=0
+    )
+    new_cache["index"] = jnp.asarray(Sv, jnp.int32)
+    return new_cache
+
+
+def prefill_tokens(params, cache, tokens, cfg: ArchConfig):
+    """Dense-family LMs: teacher-forced pass over a prompt filling the cache.
+    Returns (logits_last, cache).  Towers included when vertical is on."""
+    if cfg.family != "dense":
+        raise NotImplementedError("prompt prefill is implemented for the "
+                                  "dense family; other families decode from "
+                                  "an empty cache in the examples")
+    dims = BlockDims.from_arch(cfg)
+    B, S = tokens.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = layers.embed(params["embed"], tokens)
+    new_cache = dict(cache)
+    if _uses_feature_towers(cfg):
+        v = cfg.vertical
+        K = v.num_clients
+        dims_t = _tower_dims(cfg)
+        x_slices = jnp.stack(jnp.split(x, K, axis=-1))
+
+        def run_tower(tp, xk):
+            h = xk @ tp["proj_in"]
+            h, ks, vs = tfm.dense_stack_prefill(tp["blocks"], h, dims_t,
+                                                positions=positions)
+            return h @ tp["proj_out"], ks, vs
+
+        cuts, tks, tvs = jax.vmap(run_tower)(params["towers"], x_slices)
+        cuts = comp_lib.apply_compression(cuts, v.compression, v.topk_fraction)
+        x = merge_lib.merge_stacked(cuts, v.merge)
+        new_cache["tower"] = {
+            "k": jax.lax.dynamic_update_slice_in_dim(
+                cache["tower"]["k"], tks.astype(cache["tower"]["k"].dtype), 0, axis=3),
+            "v": jax.lax.dynamic_update_slice_in_dim(
+                cache["tower"]["v"], tvs.astype(cache["tower"]["v"].dtype), 0, axis=3),
+        }
+    x, ks, vs = tfm.dense_stack_prefill(params["server"], x, dims,
+                                        positions=positions)
+    new_cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], ks.astype(cache["k"].dtype), 0, axis=2)
+    new_cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], vs.astype(cache["v"].dtype), 0, axis=2)
+    new_cache["kv_positions"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["kv_positions"], positions, 0, axis=0)
+    new_cache["index"] = jnp.asarray(S, jnp.int32)
+    x = tfm._norm(params["final_norm"], x, dims.norm, dims.norm_eps)
+    logits = layers.unembed(params["embed"], x[:, -1, :])
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# losses and steps
+# ---------------------------------------------------------------------------
+
+def lm_loss(logits, labels, mask=None):
+    """Mean next-token cross-entropy; labels already shifted by the caller."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return -jnp.mean(ll)
+
+
+def train_loss(params, batch, cfg: ArchConfig, *, live_mask=None):
+    logits, aux = forward(params, batch, cfg, live_mask=live_mask)
+    return lm_loss(logits, batch["labels"]) + aux
+
+
+def make_train_step(cfg: ArchConfig, optimizer):
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(train_loss)(params, batch, cfg)
+        params, opt_state = optimizer.update(params, grads, opt_state)
+        return params, opt_state, loss
+
+    return step
+
+
+def make_prefill(cfg: ArchConfig):
+    def prefill(params, batch):
+        logits, _ = forward(params, batch, cfg)
+        return logits
+
+    return prefill
+
+
+def make_serve_step(cfg: ArchConfig, *, window=None, ring=False,
+                    decode_chunks=None, chunk_sharding=None):
+    def serve(params, cache, tokens):
+        return decode_step(params, cache, tokens, cfg, window=window,
+                           ring=ring, decode_chunks=decode_chunks,
+                           chunk_sharding=chunk_sharding)
+
+    return serve
+
+
+# ---------------------------------------------------------------------------
+# input specs (dry-run stand-ins — no device allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: InputShape, *, dtype=jnp.bfloat16,
+                for_train: Optional[bool] = None, kv_quant: bool = False):
+    """ShapeDtypeStructs for every model input of this (arch, shape) pair."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if for_train is None:
+        for_train = shape.kind == "train"
+
+    if shape.is_decode:
+        cache_len, ring = decode_cache_plan(cfg, shape)
+        cache = jax.eval_shape(
+            functools.partial(init_cache, cfg, B, cache_len, dtype, ring=ring,
+                              kv_quant=kv_quant)
+        )
+        return {
+            "cache": cache,
+            "tokens": jax.ShapeDtypeStruct((B,), i32),
+        }
+
+    batch: dict = {}
+    if cfg.family == "audio":
+        batch["frames"] = frontend.audio_frames_spec(B, cfg, dtype)
+        batch["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+    elif cfg.family == "vlm":
+        Sv = cfg.vlm.num_vision_tokens
+        batch["patches"] = frontend.vision_patches_spec(B, cfg, dtype)
+        batch["tokens"] = jax.ShapeDtypeStruct((B, S - Sv), i32)
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+    if for_train:
+        batch["labels"] = jax.ShapeDtypeStruct(batch["tokens"].shape, i32)
+    return batch
+
+
+def decode_cache_plan(cfg: ArchConfig, shape: InputShape) -> tuple[int, bool]:
+    """(cache_len, ring).  Dense archs go sub-quadratic (sliding-window ring
+    cache) for the 500k shape; SSM/hybrid caches are O(1) anyway."""
+    if cfg.family in ("ssm",):
+        return 1, False  # unused: ssm caches carry no kv dimension
+    if shape.seq_len > 65536:
+        return min(cfg.sliding_window, shape.seq_len), True
+    return shape.seq_len, False
+
+
+def param_count(cfg: ArchConfig) -> int:
+    """Total parameter count (from shapes only — no allocation)."""
+    import math
+
+    shapes = jax.eval_shape(
+        lambda k: init_params(cfg, k, jnp.float32), jax.random.PRNGKey(0)
+    )
+    return sum(
+        math.prod(l.shape) for l in jax.tree_util.tree_leaves(shapes)
+    )

@@ -1,0 +1,35 @@
+"""Modality frontend STUBS (the assignment's one allowed carve-out).
+
+Audio (whisper): the mel-spectrogram + conv feature extractor is stubbed —
+``input_specs`` supplies precomputed frame embeddings (B, n_frames, d_model).
+
+Vision (internvl): the InternViT encoder + MLP projector are stubbed —
+``input_specs`` supplies precomputed patch embeddings (B, n_patches, d_model).
+
+For smoke tests and examples we *generate* embeddings with the same
+statistics a real frontend would produce (unit-ish variance, f32).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def synth_audio_frames(key, batch: int, cfg: ArchConfig, dtype=jnp.float32):
+    n = cfg.encdec.encoder_seq_len
+    return jax.random.normal(key, (batch, n, cfg.d_model), dtype) * 0.5
+
+
+def synth_vision_patches(key, batch: int, cfg: ArchConfig, dtype=jnp.float32):
+    n = cfg.vlm.num_vision_tokens
+    return jax.random.normal(key, (batch, n, cfg.d_model), dtype) * 0.5
+
+
+def audio_frames_spec(batch: int, cfg: ArchConfig, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct((batch, cfg.encdec.encoder_seq_len, cfg.d_model), dtype)
+
+
+def vision_patches_spec(batch: int, cfg: ArchConfig, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct((batch, cfg.vlm.num_vision_tokens, cfg.d_model), dtype)

@@ -1,0 +1,134 @@
+"""Mixture-of-experts: top-k router + einsum dispatch/combine.
+
+The dispatch/combine formulation is the Mesh-TensorFlow / GSPMD-friendly one:
+tokens are grouped (group axis shards over "data"), experts shard over
+"model", and XLA lowers the group->expert resharding as an all-to-all.
+Supports deepseek-style shared experts and arctic-style dense residuals.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models import layers
+
+
+def init_moe(key, d_model: int, d_ff: int, cfg: MoEConfig, dtype=jnp.float32):
+    k_router, k_gate, k_up, k_down, k_shared, k_dense = jax.random.split(key, 6)
+    E = cfg.num_experts
+    p = {
+        "router": layers.dense_init(k_router, d_model, E, jnp.float32),
+        # stacked expert weights (E, d, ff) — shard E over "model"
+        "w_gate": (jax.random.truncated_normal(k_gate, -2, 2, (E, d_model, d_ff))
+                   / math.sqrt(d_model)).astype(dtype),
+        "w_up": (jax.random.truncated_normal(k_up, -2, 2, (E, d_model, d_ff))
+                 / math.sqrt(d_model)).astype(dtype),
+        "w_down": (jax.random.truncated_normal(k_down, -2, 2, (E, d_ff, d_model))
+                   / math.sqrt(d_ff)).astype(dtype),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = layers.init_gated_mlp(
+            k_shared, d_model, d_ff * cfg.num_shared_experts, dtype
+        )
+    if cfg.dense_residual:
+        p["dense_residual"] = layers.init_gated_mlp(
+            k_dense, d_model, cfg.d_ff_dense_residual, dtype
+        )
+    return p
+
+
+def _capacity(tokens_per_group: int, cfg: MoEConfig) -> int:
+    c = math.ceil(cfg.top_k * tokens_per_group / cfg.num_experts * cfg.capacity_factor)
+    return max(c, 1)
+
+
+def moe_apply(
+    params,
+    x,  # (B, S, d)
+    cfg: MoEConfig,
+    *,
+    num_groups: Optional[int] = None,
+):
+    """Returns (out, aux_loss).  Tokens over capacity are dropped (residual
+    passes them through untouched), standard Switch behaviour."""
+    B, S, d = x.shape
+    N = B * S
+    if num_groups is None:
+        # Group size ~512 tokens: the dispatch tensor is N*E*C elements with
+        # C ~ k*Sg*cf/E, so total dispatch memory scales with N*k*cf*Sg —
+        # small groups keep it bounded.  Groups shard over the data axis.
+        target = 512
+        num_groups = max(1, N // target)
+        while N % num_groups:
+            num_groups -= 1
+    G = num_groups
+    Sg = N // G
+    xt = x.reshape(G, Sg, d)
+
+    logits = (xt.astype(jnp.float32) @ params["router"])  # (G, Sg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    E, K = cfg.num_experts, cfg.top_k
+    C = _capacity(Sg, cfg)
+
+    top_p, top_idx = jax.lax.top_k(probs, K)  # (G, Sg, K)
+    # deepseek renormalizes the selected gates
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+
+    # position of each (token, k) within its expert's queue
+    onehot = jax.nn.one_hot(top_idx, E, dtype=jnp.int32)  # (G, Sg, K, E)
+    flat = onehot.reshape(G, Sg * K, E)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat  # (G, Sg*K, E)
+    pos = jnp.sum(pos_in_expert * flat, axis=-1).reshape(G, Sg, K)
+    within_cap = pos < C
+
+    gate = top_p * within_cap.astype(top_p.dtype)  # (G, Sg, K)
+    # dispatch: (G, Sg, E, C) one-hot in expert+slot
+    slot_oh = jax.nn.one_hot(jnp.where(within_cap, pos, C), C + 1, dtype=x.dtype)[..., :C]
+    disp = jnp.einsum("gske,gskc->gsec", onehot.astype(x.dtype), slot_oh)
+    comb = jnp.einsum("gsk,gske,gskc->gsec", gate.astype(x.dtype),
+                      onehot.astype(x.dtype), slot_oh)
+
+    expert_in = jnp.einsum("gsec,gsd->egcd", disp, xt)  # (E, G, C, d)
+    h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", expert_in, params["w_gate"]))
+    h = h * jnp.einsum("egcd,edf->egcf", expert_in, params["w_up"])
+    expert_out = jnp.einsum("egcf,efd->egcd", h, params["w_down"])
+    out = jnp.einsum("gsec,egcd->gsd", comb, expert_out).reshape(B, S, d)
+
+    if "shared" in params:
+        out = out + layers.gated_mlp(params["shared"], x)
+    if "dense_residual" in params:
+        out = out + layers.gated_mlp(params["dense_residual"], x)
+
+    # Switch-style load-balance auxiliary loss
+    density = jnp.mean(
+        jax.nn.one_hot(top_idx[..., 0], E, dtype=jnp.float32), axis=(0, 1)
+    )  # fraction of tokens whose top-1 is e
+    router_prob = jnp.mean(probs, axis=(0, 1))  # (E,)
+    aux = E * jnp.sum(density * router_prob) * cfg.router_aux_weight
+    return out, aux
+
+
+def moe_params_count(d_model: int, d_ff: int, cfg: MoEConfig) -> int:
+    E = cfg.num_experts
+    n = d_model * E  # router
+    n += 3 * E * d_model * d_ff
+    if cfg.num_shared_experts:
+        n += 3 * d_model * d_ff * cfg.num_shared_experts
+    if cfg.dense_residual:
+        n += 3 * d_model * cfg.d_ff_dense_residual
+    return n
+
+
+def moe_active_params_count(d_model: int, d_ff: int, cfg: MoEConfig) -> int:
+    """Active (per-token) params — used for MODEL_FLOPS = 6 * N_active * D."""
+    n = d_model * cfg.num_experts  # router always runs
+    n += 3 * cfg.top_k * d_model * d_ff
+    if cfg.num_shared_experts:
+        n += 3 * d_model * d_ff * cfg.num_shared_experts
+    if cfg.dense_residual:
+        n += 3 * d_model * cfg.d_ff_dense_residual
+    return n

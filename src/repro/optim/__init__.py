@@ -1,0 +1,4 @@
+"""Optimizers implemented natively in JAX (no optax dependency)."""
+from repro.optim.adamw import AdamW  # noqa: F401
+from repro.optim.sgd import SGD  # noqa: F401
+from repro.optim import schedules, clipping  # noqa: F401

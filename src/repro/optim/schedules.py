@@ -1,0 +1,35 @@
+"""LR schedules as pure functions of the step count (f32 scalar in, out)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def f(count):
+        return jnp.asarray(lr, jnp.float32)
+
+    return f
+
+
+def linear_warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                         final_fraction: float = 0.1):
+    def f(count):
+        c = count.astype(jnp.float32)
+        warm = c / max(warmup_steps, 1)
+        progress = jnp.clip(
+            (c - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = final_fraction + (1 - final_fraction) * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+        return peak_lr * jnp.where(c < warmup_steps, warm, cos)
+
+    return f
+
+
+def inverse_sqrt(peak_lr: float, warmup_steps: int):
+    def f(count):
+        c = jnp.maximum(count.astype(jnp.float32), 1.0)
+        warm = c / max(warmup_steps, 1)
+        decay = jnp.sqrt(warmup_steps / c) if warmup_steps else 1.0 / jnp.sqrt(c)
+        return peak_lr * jnp.minimum(warm, decay)
+
+    return f

@@ -1,0 +1,58 @@
+"""SGD with (Nesterov) momentum — the paper's experiments use plain SGD/Adam
+class optimizers; this is the light option for the MLP studies."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SGD:
+    learning_rate: float | Callable = 1e-2
+    momentum: float = 0.0
+    nesterov: bool = False
+    grad_clip_norm: Optional[float] = None
+
+    def init(self, params):
+        if self.momentum == 0.0:
+            return {"count": jnp.zeros((), jnp.int32)}
+        return {
+            "velocity": jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            ),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def _lr(self, count):
+        if callable(self.learning_rate):
+            return self.learning_rate(count)
+        return jnp.asarray(self.learning_rate, jnp.float32)
+
+    def update(self, params, grads, state):
+        count = state["count"] + 1
+        if self.grad_clip_norm is not None:
+            from repro.optim.clipping import clip_by_global_norm
+
+            grads, _ = clip_by_global_norm(grads, self.grad_clip_norm)
+        lr = self._lr(count)
+        if self.momentum == 0.0:
+            new_params = jax.tree_util.tree_map(
+                lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads,
+            )
+            return new_params, {"count": count}
+
+        def upd_v(v, g):
+            return self.momentum * v + g.astype(jnp.float32)
+
+        vel = jax.tree_util.tree_map(upd_v, state["velocity"], grads)
+
+        def upd_p(p, v, g):
+            step = self.momentum * v + g.astype(jnp.float32) if self.nesterov else v
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd_p, params, vel, grads)
+        return new_params, {"velocity": vel, "count": count}

@@ -1,0 +1,2 @@
+"""Sharding rules, collective accounting, ZeRO-1."""
+from repro.sharding import specs, collectives  # noqa: F401

@@ -1,0 +1,69 @@
+"""Collective-traffic extraction from lowered/compiled HLO text.
+
+``compiled.cost_analysis()`` does not report collective bytes, so we parse
+the (SPMD-partitioned) HLO and sum the output-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Methodology notes (EXPERIMENTS.md §Roofline):
+  * per-op payload = op OUTPUT shape bytes (for reduce-scatter this is the
+    post-scatter shard — the conservative lower bound of moved bytes);
+  * the HLO is the per-device program, so summed bytes are per device;
+  * ring all-gather/all-reduce move ~(n-1)/n * payload per link per hop —
+    we report raw payload sums and fold topology factors into the roofline
+    term in benchmarks/roofline.py.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+          "collective-permute")
+
+# matches e.g.:  %all-reduce.5 = bf16[8,128]{1,0} all-reduce(...)
+#                ROOT %x = (f32[2]{0}, f32[4]{0}) all-to-all(...)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+(" + "|".join(_KINDS) + r")(-start|-done)?\("
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Returns {"total": bytes, "by_kind": {kind: {"count": n, "bytes": b}}}."""
+    by_kind: dict = defaultdict(lambda: {"count": 0, "bytes": 0})
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":  # avoid double counting start/done pairs
+            continue
+        b = _shape_bytes(shape_str)
+        by_kind[kind]["count"] += 1
+        by_kind[kind]["bytes"] += b
+    total = sum(v["bytes"] for v in by_kind.values())
+    return {"total": total, "by_kind": dict(by_kind)}
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

@@ -1,0 +1,182 @@
+"""Loop-aware collective accounting from compiled HLO text.
+
+XLA's ``cost_analysis()`` and a flat scan of the HLO text both count a
+while-loop body ONCE, but a scan-over-layers executes it L times.  This
+module parses the computation graph (computations, while ops, their
+condition/body regions, fusion/call edges), extracts each while's trip
+count from the integer constant in its condition region, and multiplies
+collective payloads by the product of enclosing trip counts.
+
+Verified against hand-built scans in tests/test_hlo_loops.py.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+          "collective-permute")
+
+_COMP_START = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+(" + "|".join(_KINDS) + r")(-start|-done)?\("
+)
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)"
+)
+_CALLS_RE = re.compile(r"(?:calls|to_apply|condition|body)=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"[su]\d+\[\]\s+constant\((\d+)\)")
+# replica_groups=[8,32]<=[256]  (iota form: [num_groups, group_size])
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+# replica_groups={{0,1,2,3},{4,5,6,7}}  (explicit form)
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _ring_factor(kind: str, group: int) -> float:
+    """Bytes actually moved per participant on a ring, as a multiple of the
+    op's output payload: all-reduce = 2(g-1)/g, gather/scatter/a2a = (g-1)/g,
+    permute = 1."""
+    if group <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (group - 1) / group
+    if kind == "collective-permute":
+        return 1.0
+    return (group - 1) / group
+
+
+@dataclass
+class Computation:
+    name: str
+    lines: list = field(default_factory=list)
+    collectives: list = field(default_factory=list)  # (kind, bytes, group_size)
+    whiles: list = field(default_factory=list)  # (cond, body)
+    calls: list = field(default_factory=list)  # plain called computations
+    max_const: int = 1
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_computations(hlo_text: str) -> tuple[dict, str]:
+    comps: dict[str, Computation] = {}
+    entry = None
+    current = None
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        m = _COMP_START.match(raw) or _COMP_START.match(line)
+        if m and (raw.startswith("%") or raw.startswith("ENTRY")
+                  or line.startswith("%") or line.startswith("ENTRY")):
+            current = Computation(m.group(1))
+            comps[current.name] = current
+            if "ENTRY" in raw:
+                entry = current.name
+            continue
+        if current is None:
+            continue
+        if line == "}":
+            current = None
+            continue
+        current.lines.append(line)
+        om = _OP_RE.search(line)
+        if om and om.group(3) != "-done":
+            current.collectives.append(
+                (om.group(2), _shape_bytes(om.group(1)), _group_size(line))
+            )
+        wm = _WHILE_RE.search(line)
+        if wm:
+            current.whiles.append((wm.group(1), wm.group(2)))
+        else:
+            for name in _CALLS_RE.findall(line):
+                current.calls.append(name)
+        bm = _BRANCHES_RE.search(line)
+        if bm:
+            for name in bm.group(1).split(","):
+                current.calls.append(name.strip().lstrip("%"))
+        for c in _CONST_RE.findall(line):
+            current.max_const = max(current.max_const, int(c))
+    return comps, entry
+
+
+def _trip_count(comps: dict, cond_name: str) -> int:
+    """Trip count = the max integer constant in the condition region (scan
+    conditions are `i < L`).  Conservative fallback: 1."""
+    cond = comps.get(cond_name)
+    return cond.max_const if cond is not None else 1
+
+
+def loop_aware_collective_bytes(hlo_text: str) -> dict:
+    """{"total": bytes, "by_kind": {...}, "static_total": uncorrected}."""
+    comps, entry = parse_computations(hlo_text)
+    if entry is None:
+        return {"total": 0, "wire_total": 0, "by_kind": {}, "static_total": 0}
+
+    by_kind: dict = defaultdict(lambda: {"count": 0, "bytes": 0})
+    static_total = 0
+    seen_stack: list[str] = []
+
+    def visit(name: str, mult: int) -> None:
+        comp = comps.get(name)
+        if comp is None or name in seen_stack:
+            return
+        seen_stack.append(name)
+        for kind, b, group in comp.collectives:
+            by_kind[kind]["count"] += mult
+            by_kind[kind]["bytes"] += b * mult
+            by_kind[kind]["wire_bytes"] = by_kind[kind].get("wire_bytes", 0) + \
+                int(b * mult * _ring_factor(kind, group))
+        for cond, body in comp.whiles:
+            trips = _trip_count(comps, cond)
+            visit(body, mult * trips)
+            visit(cond, mult)
+        for callee in comp.calls:
+            visit(callee, mult)
+        seen_stack.pop()
+
+    visit(entry, 1)
+    for comp in comps.values():
+        static_total += sum(b for _, b, _g in comp.collectives)
+    total = sum(v["bytes"] for v in by_kind.values())
+    wire_total = sum(v.get("wire_bytes", 0) for v in by_kind.values())
+    return {"total": total, "wire_total": wire_total,
+            "by_kind": dict(by_kind), "static_total": static_total}
+
+
+def while_trip_counts(hlo_text: str) -> list[int]:
+    """All top-level-reachable while trip counts (debugging aid)."""
+    comps, entry = parse_computations(hlo_text)
+    out = []
+    for comp in comps.values():
+        for cond, _ in comp.whiles:
+            out.append(_trip_count(comps, cond))
+    return out

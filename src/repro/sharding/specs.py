@@ -1,0 +1,273 @@
+"""PartitionSpec rules: param-tree paths -> NamedSharding specs.
+
+Layout (baseline, flat model axis):
+  * data parallel  : batch dims over ("pod","data") / ("data",)
+  * tensor parallel: attention heads, FFN hidden, MoE experts, Mamba inner
+    channels, and the vocab dim over "model"
+  * layer-stacked params keep their leading scan dims replicated
+
+Vertical-split layouts (the paper's technique):
+  * "flat"   — tower weights TP over the full model axis, client dim K
+    replicated (the naive port; baseline for §Perf)
+  * "client" — the model axis is factored into ("client","tp"); each
+    client's tower lives entirely inside its own device group, so there is
+    ZERO cross-client communication below the cut layer and the merge is
+    the single collective over "client" (the paper-faithful realization)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+# rules: leaf basename -> (base_rank, spec for the trailing base dims)
+# "M" marks the model-sharded dim.
+_RULES: dict[str, tuple[int, tuple]] = {
+    # attention
+    "wq": (2, (None, "M")),
+    "wk": (2, (None, "M")),
+    "wv": (2, (None, "M")),
+    "wo": (2, ("M", None)),
+    # dense mlp
+    "w_gate": (2, (None, "M")),
+    "w_up": (2, (None, "M")),
+    "w_down": (2, ("M", None)),
+    "w_in": (2, (None, "M")),
+    "w_out": (2, ("M", None)),
+    "b_in": (1, ("M",)),
+    "b_out": (1, (None,)),
+    # moe (expert-parallel: expert dim over model axis)
+    "moe:w_gate": (3, ("M", None, None)),
+    "moe:w_up": (3, ("M", None, None)),
+    "moe:w_down": (3, ("M", None, None)),
+    "router": (2, (None, None)),
+    # mamba
+    "in_proj": (2, (None, "M")),
+    "out_proj": (2, ("M", None)),
+    "conv_w": (2, (None, "M")),
+    "conv_b": (1, ("M",)),
+    "A_log": (1, (None,)),
+    "dt_bias": (1, (None,)),
+    "D": (1, (None,)),
+    # embeddings
+    "table": (2, ("V", None)),
+    "unembed": (2, (None, "V")),
+    # towers
+    "proj_in": (2, (None, "M")),
+    "proj_out": (2, ("M", None)),
+    # norms
+    "scale": (1, (None,)),
+    "bias": (1, (None,)),
+    "mamba-norm:scale": (1, ("M",)),
+}
+
+
+def _rule_key(path: tuple[str, ...]) -> str:
+    base = path[-1]
+    if base in ("w_gate", "w_up", "w_down") and "moe" in path and \
+            "shared" not in path and "dense_residual" not in path:
+        return f"moe:{base}"
+    if base == "scale" and len(path) >= 2 and path[-2] == "norm" and "mamba" in path:
+        return "mamba-norm:scale"
+    return base
+
+
+def _path_keys(path) -> tuple[str, ...]:
+    out = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            out.append(str(p.key))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            out.append(p.name)
+        else:
+            out.append(str(p))
+    return tuple(out)
+
+
+def _divisible(dim: int, mesh: Mesh, axes) -> bool:
+    size = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        size *= mesh.shape[a]
+    return dim % size == 0
+
+
+def param_specs(
+    cfg: ArchConfig,
+    shapes,  # pytree of ShapeDtypeStruct (or arrays)
+    mesh: Mesh,
+    *,
+    vertical_mode: str = "flat",  # "flat" | "client"
+    allow_uneven_vocab: bool = True,
+    fsdp: bool = False,  # shard weights over ALL axes (FSDP); batch likewise
+):
+    """PartitionSpec pytree for the param tree."""
+    model_axes = [a for a in ("client", "tp", "model") if a in mesh.shape]
+    if "model" in mesh.shape:
+        full_model = "model"
+    else:
+        full_model = ("client", "tp")  # factored mesh
+    if fsdp:
+        dp = _dp_axes(mesh)
+        dp = dp if isinstance(dp, tuple) else (dp,)
+        full_model = dp + ((full_model,) if isinstance(full_model, str)
+                           else tuple(full_model))
+
+    def spec_for(path, leaf):
+        keys = _path_keys(path)
+        key = _rule_key(keys)
+        shape = leaf.shape
+        if key not in _RULES:
+            return P()
+        base_rank, base_spec = _RULES[key]
+        n_lead = len(shape) - base_rank
+        if n_lead < 0:
+            return P()
+
+        in_tower = "towers" in keys or "text_tower" in keys or "vision_tower" in keys
+        # model-parallel axis for this leaf
+        if vertical_mode == "client" and not isinstance(full_model, str):
+            m_axis = "tp" if in_tower else ("client", "tp")
+        else:
+            m_axis = full_model
+
+        lead = [None] * n_lead
+        # client-factored mesh: the stacked client dim K shards over "client"
+        if (
+            vertical_mode == "client"
+            and in_tower
+            and "towers" in keys
+            and n_lead >= 1
+            and cfg.vertical is not None
+            and shape[0] == cfg.vertical.num_clients
+            and _divisible(shape[0], mesh, "client")
+        ):
+            lead[0] = "client"
+
+        dims = []
+        for d, s in zip(shape[n_lead:], base_spec):
+            if s == "M":
+                dims.append(m_axis if _divisible(d, mesh, m_axis) else None)
+            elif s == "V":
+                dims.append(m_axis if _divisible(d, mesh, m_axis) else None)
+            else:
+                dims.append(None)
+        # vocab fallback: when the vocab dim is not divisible (whisper,
+        # internvl, mamba2 tokenizers), shard the d_model dim instead so the
+        # embedding/unembedding stays distributed
+        if key == "table" and dims[0] is None and \
+                _divisible(shape[n_lead + 1], mesh, m_axis):
+            dims[1] = m_axis
+        if key == "unembed" and len(dims) > 1 and dims[1] is None and \
+                _divisible(shape[n_lead], mesh, m_axis):
+            dims[0] = m_axis
+        return P(*lead, *dims)
+
+    return jax.tree_util.tree_map_with_path(spec_for, shapes)
+
+
+def batch_specs(shapes, mesh: Mesh, *, fsdp: bool = False):
+    """Input-batch specs: dim0 = batch over all data-parallel axes (FSDP:
+    over every mesh axis — one batch row per chip)."""
+    dp = _dp_axes(mesh)
+    if fsdp:
+        dp = dp if isinstance(dp, tuple) else (dp,)
+        dp = dp + tuple(a for a in ("model", "client", "tp") if a in mesh.shape)
+
+    def spec_for(path, leaf):
+        if not leaf.shape:
+            return P()
+        b = leaf.shape[0]
+        if _divisible(b, mesh, dp):
+            return P(dp, *([None] * (len(leaf.shape) - 1)))
+        # small batch (long_500k B=1): replicate
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, shapes)
+
+
+def cache_specs(cfg: ArchConfig, cache_shapes, mesh: Mesh, *,
+                shard_seq_over_model: bool = False):
+    """Decode-cache specs: batch dim over data axes; optionally the KV
+    sequence dim over the model axis (distributed flash-decoding layout)."""
+    dp = _dp_axes(mesh)
+    m = "model" if "model" in mesh.shape else ("client", "tp")
+
+    def spec_for(path, leaf):
+        keys = _path_keys(path)
+        shape = leaf.shape
+        if not shape:
+            return P()
+        name = keys[-1]
+        if name in ("index",):
+            return P()
+        if name == "kv_positions":
+            return P(None)
+        # tower caches have a leading K dim; layer dim follows
+        n_lead = 0
+        if "tower" in keys or name.startswith("text_tower"):
+            n_lead = 2 if "tower" in keys else 1
+        elif name in ("ssm_super", "conv_super"):
+            n_lead = 2
+        else:
+            n_lead = 1
+        dims = [None] * len(shape)
+        # batch dim position = n_lead
+        if len(shape) > n_lead and _divisible(shape[n_lead], mesh, dp):
+            dims[n_lead] = dp
+        # kv caches: (..., B, S, Kv, hd)
+        if name in ("k", "v", "dense_k", "dense_v", "attn_k", "attn_v",
+                    "cross_k", "cross_v", "text_tower_k", "text_tower_v",
+                    "k_scale", "v_scale"):
+            if shard_seq_over_model and len(shape) > n_lead + 1 and \
+                    _divisible(shape[n_lead + 1], mesh, m):
+                dims[n_lead + 1] = m
+            elif len(shape) > n_lead + 2 and _divisible(shape[n_lead + 2], mesh, m):
+                dims[n_lead + 2] = m  # kv-head sharding when divisible
+        # ssm states: (..., B, H, P, N) — shard heads when divisible
+        if name.startswith("ssm") and len(shape) > n_lead + 1:
+            if _divisible(shape[n_lead + 1], mesh, m):
+                dims[n_lead + 1] = m
+        if name.startswith("conv") and len(shape) > n_lead + 2:
+            if _divisible(shape[n_lead + 2], mesh, m):
+                dims[n_lead + 2] = m
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shapes)
+
+
+def _dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.shape else "data"
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def zero1_specs(param_spec_tree, shapes, mesh: Mesh):
+    """ZeRO-1: optimizer moments additionally sharded over the data axes on
+    the first replicated, divisible dim."""
+    dp = _dp_axes(mesh)
+    dp_size = 1
+    for a in (dp if isinstance(dp, tuple) else (dp,)):
+        dp_size *= mesh.shape[a]
+
+    def add_dp(spec, leaf):
+        dims = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        for i, (d, s) in enumerate(zip(leaf.shape, dims)):
+            if s is None and d % dp_size == 0 and d >= dp_size:
+                dims[i] = dp
+                break
+        return P(*dims)
+
+    return jax.tree_util.tree_map(
+        add_dp, param_spec_tree, shapes,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,86 @@
+"""Training loop: metrics, checkpointing, sharding-aware step dispatch."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.msgpack_ckpt import save_checkpoint
+from repro.configs.base import ArchConfig
+from repro.models import backbone
+from repro.optim import AdamW
+from repro.optim.schedules import linear_warmup_cosine
+
+
+@dataclass
+class TrainMetrics:
+    steps: list[int] = field(default_factory=list)
+    losses: list[float] = field(default_factory=list)
+    step_times: list[float] = field(default_factory=list)
+
+    def log(self, step: int, loss: float, dt: float) -> None:
+        self.steps.append(step)
+        self.losses.append(loss)
+        self.step_times.append(dt)
+
+    def summary(self) -> dict:
+        if not self.losses:
+            return {}
+        n = max(len(self.losses) // 10, 1)
+        return {
+            "first_loss": self.losses[0],
+            "last_loss": self.losses[-1],
+            "best_loss": min(self.losses),
+            "mean_step_s": sum(self.step_times[1:]) / max(len(self.step_times) - 1, 1),
+            "loss_drop": self.losses[0] - min(
+                sum(self.losses[-n:]) / n, self.losses[-1]
+            ),
+        }
+
+
+def train(
+    cfg: ArchConfig,
+    loader,
+    *,
+    steps: int = 100,
+    learning_rate: float = 3e-4,
+    warmup: int = 20,
+    grad_clip: float = 1.0,
+    log_every: int = 10,
+    checkpoint_path: Optional[str] = None,
+    checkpoint_every: int = 0,
+    seed: int = 0,
+    param_dtype=jnp.float32,
+    print_fn: Callable = print,
+) -> tuple[dict, TrainMetrics]:
+    """Single-host training driver (the multi-pod path shares the step fn —
+    see launch/dryrun.py for its sharded lowering)."""
+    opt = AdamW(
+        learning_rate=linear_warmup_cosine(learning_rate, warmup, steps),
+        weight_decay=0.1,
+        grad_clip_norm=grad_clip,
+    )
+    params = backbone.init_params(cfg, jax.random.PRNGKey(seed), param_dtype)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(backbone.make_train_step(cfg, opt))
+
+    metrics = TrainMetrics()
+    it = iter(loader)
+    for step in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        t0 = time.time()
+        params, opt_state, loss = step_fn(params, opt_state, batch)
+        loss = float(loss)
+        dt = time.time() - t0
+        metrics.log(step, loss, dt)
+        if step % log_every == 0 or step == steps - 1:
+            print_fn(f"step {step:5d}  loss {loss:8.4f}  {dt*1e3:8.1f} ms")
+        if checkpoint_path and checkpoint_every and \
+                (step + 1) % checkpoint_every == 0:
+            save_checkpoint(checkpoint_path, params, step=step)
+    if checkpoint_path:
+        save_checkpoint(checkpoint_path, params, step=steps)
+    return params, metrics

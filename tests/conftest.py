@@ -1,0 +1,17 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here on purpose — smoke tests and
+benches must see the real single CPU device; only launch/dryrun.py forces
+the 512-device placeholder topology (and multi-device tests spawn
+subprocesses with their own env)."""
+import os
+import sys
+
+import jax
+import pytest
+
+# the benchmarks package lives at the repo root (next to tests/)
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,92 @@
+"""Attention-layer invariants: chunked-flash == dense, GQA, windows, qk-norm."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import attention as attn
+
+
+def _qkv(B, Sq, Skv, H, Kv, D, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D))
+    k = jax.random.normal(ks[1], (B, Skv, Kv, D))
+    v = jax.random.normal(ks[2], (B, Skv, Kv, D))
+    return q, k, v
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    h=st.sampled_from([4, 8]),
+    kv=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([64, 128]),
+    qc=st.sampled_from([16, 32]),
+    causal=st.booleans(),
+    seed=st.integers(0, 99),
+)
+def test_chunked_equals_dense(h, kv, s, qc, causal, seed):
+    q, k, v = _qkv(2, s, s, h, kv, 16, seed)
+    pos = jnp.arange(s)
+    dense = attn.dense_attention(q, k, v, causal=causal, q_positions=pos,
+                                 kv_positions=pos)
+    chunked = attn.chunked_flash_attention(q, k, v, causal=causal,
+                                           q_positions=pos, kv_positions=pos,
+                                           q_chunk=qc, kv_chunk=qc)
+    np.testing.assert_allclose(chunked, dense, rtol=2e-4, atol=2e-4)
+
+
+def test_sliding_window_equals_dense_window():
+    q, k, v = _qkv(1, 64, 64, 4, 4, 16)
+    pos = jnp.arange(64)
+    for W in (8, 16):
+        d = attn.dense_attention(q, k, v, causal=True, q_positions=pos,
+                                 kv_positions=pos, window=W)
+        c = attn.chunked_flash_attention(q, k, v, causal=True, q_positions=pos,
+                                         kv_positions=pos, window=W,
+                                         q_chunk=16, kv_chunk=16)
+        np.testing.assert_allclose(c, d, rtol=2e-4, atol=2e-4)
+
+
+def test_window_actually_masks():
+    """With window=1 each token attends only to itself -> output == v row."""
+    q, k, v = _qkv(1, 8, 8, 2, 2, 4)
+    pos = jnp.arange(8)
+    out = attn.dense_attention(q, k, v, causal=True, q_positions=pos,
+                               kv_positions=pos, window=1)
+    np.testing.assert_allclose(out, v, rtol=1e-5, atol=1e-6)
+
+
+def test_pick_chunk_divides():
+    for n in (1500, 4096, 524288, 7, 1):
+        c = attn._pick_chunk(n, 512)
+        assert n % c == 0 and 1 <= c <= 512
+
+
+def test_qk_norm_changes_output_but_stays_finite():
+    key = jax.random.PRNGKey(0)
+    p_plain = attn.init_attention(key, 32, 4, 2, 8, qk_norm=False)
+    p_qk = attn.init_attention(key, 32, 4, 2, 8, qk_norm=True)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32))
+    o1, _ = attn.attention_apply(p_plain, x, n_heads=4, n_kv_heads=2, head_dim=8)
+    o2, _ = attn.attention_apply(p_qk, x, n_heads=4, n_kv_heads=2, head_dim=8)
+    assert jnp.all(jnp.isfinite(o1)) and jnp.all(jnp.isfinite(o2))
+    assert float(jnp.max(jnp.abs(o1 - o2))) > 1e-4
+
+
+def test_decode_attention_masks_unwritten_slots():
+    """Fresh cache slots (kv_positions == -1) must not contribute."""
+    key = jax.random.PRNGKey(0)
+    p = attn.init_attention(key, 32, 4, 4, 8)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 1, 32))
+    S = 8
+    ck = jnp.full((2, S, 4, 8), 1e3)  # poison unwritten slots
+    cv = jnp.full((2, S, 4, 8), 1e3)
+    kvp = jnp.zeros((S,), jnp.int32) - 1
+    out, nk, nv, npos, _ = attn.decode_attention_apply(
+        p, x, ck, cv, jnp.asarray(0), n_heads=4, n_kv_heads=4, head_dim=8,
+        kv_positions=kvp,
+    )
+    assert jnp.all(jnp.isfinite(out))
+    assert float(jnp.max(jnp.abs(out))) < 1e2, "poisoned slots leaked into attention"
+    assert int(npos[0]) == 0 and int(npos[1]) == -1

@@ -1,0 +1,70 @@
+"""Compact Bilinear Pooling merge (paper §3's named alternative encoder)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bilinear import (
+    CountSketch,
+    _batched_scatter,
+    merge_cbp,
+    sketch_inner_product_preserved,
+)
+
+
+def test_count_sketch_preserves_inner_products():
+    err = sketch_inner_product_preserved(jax.random.PRNGKey(0),
+                                         d_in=64, d_out=1024)
+    assert err < 0.6, f"sketch too lossy: {err}"  # unbiased, high-variance
+
+
+def test_sketch_is_linear():
+    sk = CountSketch.create(jax.random.PRNGKey(0), 1, 16, 64)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16))
+    y = jax.random.normal(jax.random.PRNGKey(2), (4, 16))
+    px = _batched_scatter(x * sk.signs[0], sk.buckets[0], 64)
+    py = _batched_scatter(y * sk.signs[0], sk.buckets[0], 64)
+    pxy = _batched_scatter((x + y) * sk.signs[0], sk.buckets[0], 64)
+    np.testing.assert_allclose(px + py, pxy, rtol=1e-5, atol=1e-5)
+
+
+def test_merge_cbp_shapes_and_norm():
+    sk = CountSketch.create(jax.random.PRNGKey(0), 3, 32, 128)
+    cuts = jax.random.normal(jax.random.PRNGKey(1), (3, 8, 32))
+    out = merge_cbp(cuts, sk)
+    assert out.shape == (8, 128)
+    # l2-normalized output
+    np.testing.assert_allclose(jnp.linalg.norm(out, axis=-1),
+                               jnp.ones(8), rtol=1e-3)
+
+
+def test_merge_cbp_captures_interactions():
+    """CBP output must depend on the INTERACTION of clients, not just the
+    sum: changing one client's input changes the merged code even when the
+    element-wise sum of cuts is held fixed."""
+    sk = CountSketch.create(jax.random.PRNGKey(0), 2, 16, 256)
+    a = jax.random.normal(jax.random.PRNGKey(1), (1, 16))
+    b = jax.random.normal(jax.random.PRNGKey(2), (1, 16))
+    delta = jax.random.normal(jax.random.PRNGKey(3), (1, 16))
+    m1 = merge_cbp(jnp.stack([a, b]), sk)
+    m2 = merge_cbp(jnp.stack([a + delta, b - delta]), sk)  # same sum
+    assert float(jnp.max(jnp.abs(m1 - m2))) > 1e-3
+
+
+def test_merge_cbp_drop_uses_mean_sketch():
+    sk = CountSketch.create(jax.random.PRNGKey(0), 3, 16, 128)
+    cuts = jax.random.normal(jax.random.PRNGKey(1), (3, 4, 16))
+    live = jnp.array([1.0, 0.0, 1.0])
+    out = merge_cbp(cuts, sk, live_mask=live)
+    assert out.shape == (4, 128)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    # dropping must change the output (client 1 carried signal)
+    full = merge_cbp(cuts, sk)
+    assert float(jnp.max(jnp.abs(out - full))) > 1e-4
+
+
+def test_cbp_is_differentiable():
+    sk = CountSketch.create(jax.random.PRNGKey(0), 2, 16, 64)
+    cuts = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 16))
+    g = jax.grad(lambda c: jnp.sum(merge_cbp(c, sk) ** 2))(cuts)
+    assert g.shape == cuts.shape
+    assert float(jnp.max(jnp.abs(g))) > 0

@@ -1,0 +1,46 @@
+"""Checkpoint roundtrip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.msgpack_ckpt import load_checkpoint, save_checkpoint
+
+
+def test_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "b": {"c": jnp.ones((4,), jnp.bfloat16), "d": jnp.asarray(3, jnp.int32)},
+        "lst": [jnp.zeros(2), jnp.ones(2)],
+        "tup": (jnp.full((2, 2), 7.0),),
+        "none": None,
+    }
+    path = str(tmp_path / "ckpt.msgpack")
+    save_checkpoint(path, tree, step=42)
+    loaded, step = load_checkpoint(path)
+    assert step == 42
+    np.testing.assert_allclose(loaded["a"], tree["a"])
+    assert loaded["b"]["c"].dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        loaded["b"]["c"].astype(np.float32), np.ones(4)
+    )
+    assert int(loaded["b"]["d"]) == 3
+    assert isinstance(loaded["tup"], tuple)
+    assert loaded["none"] is None
+
+
+def test_model_params_roundtrip(tmp_path):
+    from repro.configs.base import get_arch
+    from repro.models import backbone
+
+    cfg = get_arch("smollm-360m").reduced()
+    params = backbone.init_params(cfg, jax.random.PRNGKey(0))
+    path = str(tmp_path / "model.msgpack")
+    save_checkpoint(path, params, step=1)
+    loaded, _ = load_checkpoint(path)
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(loaded)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+    # structures identical
+    assert (jax.tree_util.tree_structure(params)
+            == jax.tree_util.tree_structure(loaded))

@@ -1,0 +1,50 @@
+"""Cut-layer compression (beyond-paper feature, paper §4.4 future work)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compression as comp
+
+
+def test_topk_keeps_largest():
+    x = jnp.asarray([[1.0, -5.0, 0.1, 3.0]])
+    out = comp.topk_sparsify(x, 0.5)
+    np.testing.assert_allclose(out, [[0.0, -5.0, 0.0, 3.0]])
+
+
+def test_topk_gradient_is_straight_through():
+    x = jnp.asarray([1.0, -5.0, 0.1, 3.0])
+    g = jax.grad(lambda t: jnp.sum(comp.topk_sparsify(t, 0.5) * 2.0))(x)
+    np.testing.assert_allclose(g, jnp.full(4, 2.0))
+
+
+def test_int8_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 256))
+    deq = comp.int8_quantize(x)
+    span = float(x.max() - x.min())
+    assert float(jnp.max(jnp.abs(deq - x))) <= span / 255.0 + 1e-6
+
+
+def test_int8_gradient_is_straight_through():
+    x = jax.random.normal(jax.random.PRNGKey(0), (8,))
+    g = jax.grad(lambda t: jnp.sum(comp.int8_quantize(t)))(x)
+    np.testing.assert_allclose(g, jnp.ones(8))
+
+
+def test_wire_bytes_ordering():
+    """int8 < topk(25%, values+indices) < raw f32 for realistic cut widths."""
+    shape, fb = (32, 1024), 4
+    raw = comp.wire_bytes(shape, fb, None)
+    topk = comp.wire_bytes(shape, fb, "topk", 0.25)
+    q8 = comp.wire_bytes(shape, fb, "int8")
+    assert q8 < topk < raw
+    assert raw == 32 * 1024 * 4
+    # at 5% sparsity topk wins over int8 too
+    topk5 = comp.wire_bytes(shape, fb, "topk", 0.05)
+    assert topk5 < q8
+
+
+def test_unknown_scheme_raises():
+    with pytest.raises(ValueError):
+        comp.apply_compression(jnp.zeros(4), "gzip")

@@ -1,0 +1,42 @@
+"""Client-drop sampling (paper §4.3)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dropping
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.integers(2, 8), seed=st.integers(0, 999))
+def test_exact_drop_count(k, seed):
+    nd = min(k - 1, 2)
+    live = dropping.sample_live_mask(jax.random.PRNGKey(seed), k, nd)
+    assert int(jnp.sum(live)) == k - nd
+    assert set(jnp.unique(live).tolist()) <= {0.0, 1.0}
+
+
+def test_zero_drop_is_all_live():
+    live = dropping.sample_live_mask(jax.random.PRNGKey(0), 4, 0)
+    assert int(jnp.sum(live)) == 4
+
+
+def test_cannot_drop_everyone():
+    with pytest.raises(ValueError):
+        dropping.sample_live_mask(jax.random.PRNGKey(0), 4, 4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 999))
+def test_bernoulli_always_one_live(seed):
+    live = dropping.bernoulli_live_mask(jax.random.PRNGKey(seed), 4, 0.99)
+    assert int(jnp.sum(live)) >= 1
+
+
+def test_drop_is_uniform_ish():
+    """Every client gets dropped sometimes (no positional bias)."""
+    counts = jnp.zeros(4)
+    for s in range(200):
+        live = dropping.sample_live_mask(jax.random.PRNGKey(s), 4, 1)
+        counts = counts + (1 - live)
+    assert float(counts.min()) > 20, counts

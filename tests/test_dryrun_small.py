@@ -1,0 +1,92 @@
+"""Integration test of the dry-run lowering path on a small (2,4) mesh with
+reduced configs — guards the specs/step plumbing that the full 512-device
+dry-run exercises (subprocess: XLA device flags must precede jax init)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    from repro.configs.base import get_arch
+    from repro.launch.dryrun import analyze
+    from repro.models import backbone
+    from repro.optim import AdamW
+    from repro.sharding import specs as specs_lib
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+
+    def lower_train(cfg, B=4, S=32):
+        opt = AdamW(learning_rate=1e-3)
+        p_shapes = jax.eval_shape(
+            lambda k: backbone.init_params(cfg, k, jnp.float32),
+            jax.random.PRNGKey(0))
+        o_shapes = jax.eval_shape(opt.init, p_shapes)
+        b_shapes = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                    "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if cfg.family == "audio":
+            b_shapes["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encdec.encoder_seq_len, cfg.d_model), jnp.float32)
+        if cfg.family == "vlm":
+            b_shapes["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.vlm.num_vision_tokens, cfg.d_model), jnp.float32)
+        p_specs = specs_lib.param_specs(cfg, p_shapes, mesh)
+        o_specs = {"mu": p_specs, "nu": p_specs,
+                   "count": jax.sharding.PartitionSpec()}
+        b_specs = specs_lib.batch_specs(b_shapes, mesh)
+
+        def train_step(params, opt_state, batch):
+            def loss_fn(p):
+                logits, aux = backbone.forward(p, batch, cfg)
+                return backbone.lm_loss(logits, batch["labels"]) + aux
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params, opt_state = opt.update(params, grads, opt_state)
+            return params, opt_state, loss
+
+        jitted = jax.jit(train_step, in_shardings=specs_lib.named(
+            mesh, (p_specs, o_specs, b_specs)))
+        return jitted.lower(p_shapes, o_shapes, b_shapes).compile()
+
+    def lower_decode(cfg, B=4, S=32):
+        p_shapes = jax.eval_shape(
+            lambda k: backbone.init_params(cfg, k, jnp.float32),
+            jax.random.PRNGKey(0))
+        cache_shapes = jax.eval_shape(
+            lambda: backbone.init_cache(cfg, B, S, jnp.float32))
+        tok = jax.ShapeDtypeStruct((B,), jnp.int32)
+        p_specs = specs_lib.param_specs(cfg, p_shapes, mesh)
+        c_specs = specs_lib.cache_specs(cfg, cache_shapes, mesh)
+        t_specs = specs_lib.batch_specs({"t": tok}, mesh)["t"]
+
+        def serve(params, cache, tokens):
+            return backbone.decode_step(params, cache, tokens, cfg)
+
+        jitted = jax.jit(serve, in_shardings=specs_lib.named(
+            mesh, (p_specs, c_specs, t_specs)))
+        return jitted.lower(p_shapes, cache_shapes, tok).compile()
+
+    for arch in ("smollm-360m", "deepseek-moe-16b", "mamba2-1.3b",
+                 "zamba2-7b", "whisper-tiny", "internvl2-26b"):
+        cfg = get_arch(arch).reduced()
+        ct = lower_train(cfg)
+        info = analyze(None, ct, mesh)
+        assert info["hlo_flops"] > 0, arch
+        cd = lower_decode(cfg)
+        print(arch, "ok", int(info["collective_bytes_corrected"]))
+    print("SMALL_DRYRUN_OK")
+""")
+
+
+@pytest.mark.slow
+def test_dryrun_small_mesh_all_families():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    res = subprocess.run([sys.executable, "-c", SCRIPT],
+                         capture_output=True, text=True, env=env, timeout=1200)
+    assert "SMALL_DRYRUN_OK" in res.stdout, res.stdout[-2000:] + res.stderr[-4000:]

@@ -1,0 +1,54 @@
+"""int8 KV-cache quantization (beyond-paper, §Perf C2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.models import backbone
+from repro.models.attention import dequantize_kv, quantize_kv
+
+
+def test_quantize_roundtrip_error():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 2, 64))
+    q, s = quantize_kv(x)
+    assert q.dtype == jnp.int8
+    deq = dequantize_kv(q, s)
+    # symmetric int8: error bounded by scale/2 = amax/254
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    assert float(jnp.max(jnp.abs(deq - x) / jnp.maximum(amax, 1e-8))) < 1 / 127
+
+
+def test_int8_cache_decode_close_to_fp():
+    cfg = get_arch("smollm-360m").reduced()
+    params = backbone.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    c_fp = backbone.init_cache(cfg, B, S)
+    c_q8 = backbone.init_cache(cfg, B, S, kv_quant=True)
+    assert c_q8["k"].dtype == jnp.int8 and "k_scale" in c_q8
+    fp, q8 = [], []
+    for t in range(S):
+        l1, c_fp = backbone.decode_step(params, c_fp, toks[:, t], cfg)
+        l2, c_q8 = backbone.decode_step(params, c_q8, toks[:, t], cfg)
+        fp.append(l1)
+        q8.append(l2)
+    fp, q8 = jnp.stack(fp, 1), jnp.stack(q8, 1)
+    rel = float(jnp.max(jnp.abs(fp - q8)) / jnp.max(jnp.abs(fp)))
+    assert rel < 0.02, f"int8 cache too lossy: {rel}"
+    # and the argmax next-token decisions agree almost everywhere
+    agree = float((jnp.argmax(fp, -1) == jnp.argmax(q8, -1)).mean())
+    assert agree > 0.9, agree
+
+
+def test_int8_cache_with_flash_decode_chunks():
+    cfg = get_arch("smollm-360m").reduced()
+    params = backbone.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    c_a = backbone.init_cache(cfg, B, S, kv_quant=True)
+    c_b = backbone.init_cache(cfg, B, S, kv_quant=True)
+    for t in range(S):
+        la, c_a = backbone.decode_step(params, c_a, toks[:, t], cfg)
+        lb, c_b = backbone.decode_step(params, c_b, toks[:, t], cfg,
+                                       decode_chunks=4)
+    np.testing.assert_allclose(la, lb, rtol=2e-3, atol=2e-3)

@@ -1,0 +1,87 @@
+"""NoPeek-style leakage metric + the §4.4 placement advisor."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.vertical_mlp import BANK_MARKETING
+from repro.core import leakage, split_model
+from repro.core.costs import advise_split_depth
+from repro.data.synthetic import make_dataset, minibatches
+from repro.optim import AdamW
+
+
+def test_dcor_identity_is_one():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 8))
+    assert float(leakage.distance_correlation(x, x)) > 0.99
+
+
+def test_dcor_independent_below_dependent():
+    """The biased V-statistic floors around ~0.3 at n=256; what matters is
+    the clear ordering: independent << linear-map << identity."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 8))
+    z = jax.random.normal(jax.random.PRNGKey(1), (256, 8))
+    w = jax.random.normal(jax.random.PRNGKey(2), (8, 4))
+    indep = float(leakage.distance_correlation(x, z))
+    dep = float(leakage.distance_correlation(x, x @ w))
+    assert indep < 0.45
+    assert indep < dep - 0.2
+
+
+def test_dcor_detects_linear_map():
+    x = jax.random.normal(jax.random.PRNGKey(0), (128, 8))
+    w = jax.random.normal(jax.random.PRNGKey(1), (8, 4))
+    assert float(leakage.distance_correlation(x, x @ w)) > 0.5
+
+
+def test_nopeek_training_reduces_leakage():
+    """Training with the dCor penalty lowers cut-layer leakage vs without."""
+    ds = make_dataset("bank_marketing", seed=0)
+    cfg = BANK_MARKETING
+    opt = AdamW(learning_rate=3e-3)
+
+    def run(leak_w):
+        key = jax.random.PRNGKey(0)
+        params = split_model.init_split_mlp(key, cfg)
+        state = opt.init(params)
+        if leak_w:
+            step = leakage.make_nopeek_train_step(cfg, opt, leakage_weight=leak_w)
+            for i, (xb, yb) in enumerate(
+                minibatches(ds.x_train, ds.y_train, 128, seed=0, epochs=10)
+            ):
+                if i >= 80:
+                    break
+                params, state, *_ = step(params, state, jnp.asarray(xb),
+                                         jnp.asarray(yb))
+        else:
+            step = split_model.make_split_train_step(cfg, opt)
+            for i, (xb, yb) in enumerate(
+                minibatches(ds.x_train, ds.y_train, 128, seed=0, epochs=10)
+            ):
+                if i >= 80:
+                    break
+                key, sub = jax.random.split(key)
+                params, state, _ = step(params, state, sub, jnp.asarray(xb),
+                                        jnp.asarray(yb))
+        x = jnp.asarray(ds.x_test[:256])
+        return np.mean(leakage.measure_split_leakage(params, cfg, x))
+
+    plain = run(0.0)
+    nopeek = run(2.0)
+    assert nopeek < plain, (plain, nopeek)
+
+
+def test_advisor_matches_paper_guidance():
+    cfg = BANK_MARKETING
+    # starved network -> communication-bound -> deep towers
+    slow_net = advise_split_depth(
+        cfg, bandwidth_bytes_per_s=1e4, client_flops_per_s=1e12,
+        server_flops_per_s=1e13,
+    )
+    assert slow_net["comm_bound"] and slow_net["recommended_tower_layers"] > 1
+    # fat pipe, weak clients -> compute-bound -> privacy-minimum towers
+    fast_net = advise_split_depth(
+        cfg, bandwidth_bytes_per_s=1e11, client_flops_per_s=1e6,
+        server_flops_per_s=1e13,
+    )
+    assert not fast_net["comm_bound"]
+    assert fast_net["recommended_tower_layers"] == 1

@@ -1,0 +1,49 @@
+"""Vertical-partition invariants (hypothesis property tests)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import partition as part
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 200), k=st.integers(1, 8))
+def test_contiguous_partition_covers(n, k):
+    if k > n:
+        k = n
+    slices = part.contiguous_partition(n, k)
+    part.validate_partition(slices, n)
+    assert len(slices) == k
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 200), k=st.integers(1, 8))
+def test_strided_partition_covers(n, k):
+    if k > n:
+        k = n
+    part.validate_partition(part.strided_partition(n, k), n)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 128), k=st.integers(1, 6), seed=st.integers(0, 999))
+def test_random_partition_covers(n, k, seed):
+    if k > n:
+        k = n
+    part.validate_partition(part.random_partition(n, k, seed), n)
+
+
+def test_by_source_partition():
+    slices = part.by_source_partition((9, 7))  # the paper's bank split
+    part.validate_partition(slices, 16)
+    assert slices[0].size == 9 and slices[1].size == 7
+
+
+def test_validate_rejects_overlap():
+    s = [part.FeatureSlice(0, (0, 1)), part.FeatureSlice(1, (1, 2))]
+    with pytest.raises(ValueError, match="overlap"):
+        part.validate_partition(s, 3)
+
+
+def test_validate_rejects_missing():
+    s = [part.FeatureSlice(0, (0,))]
+    with pytest.raises(ValueError, match="misses"):
+        part.validate_partition(s, 2)

@@ -1,0 +1,64 @@
+"""Role-0/1/3 protocol: equivalence to monolithic backprop + ledger accounting."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.vertical_mlp import BANK_MARKETING, GIVE_ME_CREDIT
+from repro.core import protocol, split_model, towers
+from repro.core.costs import epoch_traffic
+
+
+def _setup(cfg, seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = split_model.init_split_mlp(key, cfg)
+    ks = jax.random.split(key, 3)
+    B = 16
+    x = jax.random.normal(ks[0], (B, cfg.input_dim))
+    y = jax.random.randint(ks[1], (B,), 0, cfg.num_classes)
+    slices = split_model.feature_slices(cfg)
+    feats = [x[:, jnp.asarray(s.indices)] for s in slices]
+    return params, feats, y
+
+
+@pytest.mark.parametrize("merge", ["sum", "avg", "max", "concat", "mul"])
+def test_protocol_equals_monolithic(merge):
+    import dataclasses
+
+    cfg = dataclasses.replace(BANK_MARKETING, merge=merge)
+    params, feats, y = _setup(cfg)
+
+    def loss_fn(logits, labels):
+        return split_model.softmax_xent(logits, labels, cfg.num_classes)
+
+    protocol.assert_equivalent_to_monolithic(
+        towers.mlp_tower_apply, towers.mlp_tower_apply, loss_fn,
+        params["towers"], params["server"], feats, y, merge,
+    )
+
+
+def test_ledger_matches_analytic_costs():
+    cfg = GIVE_ME_CREDIT
+    params, feats, y = _setup(cfg)
+
+    def loss_fn(logits, labels):
+        return split_model.softmax_xent(logits, labels, cfg.num_classes)
+
+    _, _, _, ledger = protocol.protocol_step(
+        towers.mlp_tower_apply, towers.mlp_tower_apply, loss_fn,
+        params["towers"], params["server"], feats, y, cfg.merge,
+    )
+    B = feats[0].shape[0]
+    traffic = epoch_traffic(cfg, num_samples=B, batch_size=B)  # one batch
+    assert ledger.sent_by("role0") == traffic["role0"].sent_bytes
+    assert ledger.received_by("role0") == traffic["role0"].received_bytes
+    assert ledger.sent_by("role1") == traffic["role1"].sent_bytes
+    assert ledger.sent_by("role3") == traffic["role3"].sent_bytes
+
+
+def test_role0_traffic_scales_with_clients():
+    """Paper Table 5: the compute server's traffic ~ K x a client's."""
+    cfg = GIVE_ME_CREDIT
+    t = epoch_traffic(cfg, num_samples=1024, batch_size=32)
+    assert t["role0"].sent_bytes > t["role1"].sent_bytes
+    ratio = t["role0"].sent_bytes / t["role1"].sent_bytes
+    assert cfg.num_clients <= ratio <= cfg.num_clients + 1

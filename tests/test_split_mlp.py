@@ -1,0 +1,119 @@
+"""The paper's split MLP: end-to-end training on synthetic financial data."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.vertical_mlp import BANK_MARKETING
+from repro.core import split_model
+from repro.data.synthetic import make_dataset, minibatches
+from repro.optim import AdamW
+
+
+def _accuracy(params, forward, x, y, batch=1024):
+    correct = 0
+    for i in range(0, len(x), batch):
+        logits = forward(params, jnp.asarray(x[i:i + batch]))
+        correct += int((jnp.argmax(logits, -1) == jnp.asarray(y[i:i + batch])).sum())
+    return correct / len(x)
+
+
+@pytest.fixture(scope="module")
+def bank():
+    return make_dataset("bank_marketing", seed=0)
+
+
+def _train_split(cfg, ds, steps=120, num_drop=0, compression=None, seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = split_model.init_split_mlp(key, cfg)
+    opt = AdamW(learning_rate=3e-3)
+    state = opt.init(params)
+    step = split_model.make_split_train_step(cfg, opt, num_drop=num_drop,
+                                             compression=compression)
+    it = minibatches(ds.x_train, ds.y_train, 256, seed=seed, epochs=50)
+    for i, (xb, yb) in enumerate(it):
+        if i >= steps:
+            break
+        key, sub = jax.random.split(key)
+        params, state, loss = step(params, state, sub,
+                                   jnp.asarray(xb), jnp.asarray(yb))
+    return params, float(loss)
+
+
+def test_split_mlp_learns():
+    """Learnability asserted on PhraseBank (3-class, 59% majority) where
+    accuracy gains over majority are unambiguous; the bank task's extreme
+    imbalance makes accuracy ~= majority for every model (paper Table 2
+    shows the same: 0.83/0.84 vs ~0.88 majority — F1 is the signal there).
+    """
+    from repro.configs.vertical_mlp import FINANCIAL_PHRASEBANK
+
+    ds = make_dataset("financial_phrasebank", seed=0)
+    params, _ = _train_split(FINANCIAL_PHRASEBANK, ds, steps=150)
+    fwd = jax.jit(lambda p, x: split_model.split_forward(
+        p, x, FINANCIAL_PHRASEBANK))
+    acc = _accuracy(params, fwd, ds.x_test, ds.y_test)
+    majority = max((ds.y_test == c).mean() for c in range(3))
+    assert acc > majority + 0.03, f"split model did not learn: {acc} vs {majority}"
+
+
+def test_split_parity_with_centralized(bank):
+    """Paper Table 2: split ~ centralized (within a few points)."""
+    params_s, _ = _train_split(BANK_MARKETING, bank)
+    fwd_s = jax.jit(lambda p, x: split_model.split_forward(p, x, BANK_MARKETING))
+    acc_s = _accuracy(params_s, fwd_s, bank.x_test, bank.y_test)
+
+    key = jax.random.PRNGKey(0)
+    params_c = split_model.init_centralized_mlp(key, BANK_MARKETING)
+    opt = AdamW(learning_rate=3e-3)
+    state = opt.init(params_c)
+    step = split_model.make_centralized_train_step(BANK_MARKETING, opt)
+    for i, (xb, yb) in enumerate(
+        minibatches(bank.x_train, bank.y_train, 256, seed=0, epochs=50)
+    ):
+        if i >= 120:
+            break
+        params_c, state, _ = step(params_c, state, jnp.asarray(xb), jnp.asarray(yb))
+    acc_c = _accuracy(params_c, jax.jit(split_model.centralized_forward),
+                      bank.x_test, bank.y_test)
+    assert abs(acc_s - acc_c) < 0.06, (acc_s, acc_c)
+
+
+def test_dropping_degrades(bank):
+    """Paper Table 4: test-time drops reduce accuracy."""
+    params, _ = _train_split(BANK_MARKETING, bank, steps=120)
+    fwd = jax.jit(lambda p, x, live: split_model.split_forward(
+        p, x, BANK_MARKETING, live_mask=live))
+    x = jnp.asarray(bank.x_test)
+    full = _accuracy(params, lambda p, xx: fwd(p, xx, jnp.ones(2)),
+                     bank.x_test, bank.y_test)
+    dropped = _accuracy(params, lambda p, xx: fwd(p, xx, jnp.asarray([1.0, 0.0])),
+                        bank.x_test, bank.y_test)
+    assert dropped <= full + 0.02, (full, dropped)
+
+
+def test_compression_trains(bank):
+    cfg = BANK_MARKETING
+    params, loss = _train_split(cfg, bank, steps=60, compression="int8")
+    assert np.isfinite(loss)
+
+
+def test_secure_agg_equals_plain_in_expectation(bank):
+    """Masked-sum forward == plain forward (cancellation) for the avg merge."""
+    cfg = dataclasses.replace(BANK_MARKETING, merge="avg")
+    key = jax.random.PRNGKey(0)
+    params = split_model.init_split_mlp(key, cfg)
+    x = jnp.asarray(bank.x_test[:64])
+    from repro.core import merge as merge_lib, secure_agg, towers
+
+    slices = split_model.feature_slices(cfg)
+    cuts = jnp.stack([
+        towers.mlp_tower_apply(params["towers"][k], x[:, jnp.asarray(s.indices)])
+        for k, s in enumerate(slices)
+    ])
+    agg, _ = secure_agg.secure_sum(cuts, base_seed=0)
+    merged_secure = agg / cfg.num_clients
+    merged_plain = merge_lib.merge_stacked(cuts, "avg")
+    np.testing.assert_allclose(merged_secure, merged_plain, rtol=1e-3, atol=1e-3)
