@@ -47,6 +47,51 @@ def bench_kernels() -> None:
     _emit("flash_attention/ref", (time.time() - t0) / 5 * 1e6, "B1 H4 S512 D64")
 
 
+def bench_runtime(out: dict) -> None:
+    """Simulated step time + cut-layer traffic: serial vs pipelined vs
+    no-wait (repro.runtime) at K in {2, 4, 8} clients, M=4 microbatches.
+    The no-wait row carries a 10x straggler on the last client — the
+    scenario bounded staleness exists for."""
+    from repro.configs.vertical_mlp import MLPSplitConfig
+    from repro.runtime import (LinkModel, plan_step, simulate_pipelined,
+                               simulate_serial)
+
+    rows = []
+    for K in (2, 4, 8):
+        cfg = MLPSplitConfig(
+            name=f"runtime_bench_k{K}", input_dim=64 * K, num_classes=2,
+            num_clients=K, client_feature_sizes=(64,) * K,
+            tower_hidden=(128,), cut_dim=64, server_hidden=(128,), merge="avg",
+        )
+        plan = plan_step(cfg, batch_size=256, microbatches=4)
+        link = LinkModel.uniform(K)
+        straggled = link.with_straggler(K - 1, slowdown=10.0)
+
+        serial = simulate_serial(plan, link)
+        pipelined = simulate_pipelined(plan, link, mode="pipelined")
+        nowait = simulate_pipelined(plan, straggled, mode="nowait")
+        # each speedup divides by the serial schedule ON THE SAME LINK
+        # model; the straggled-serial baseline is emitted as its own row so
+        # the nowait denominator is visible in the table
+        serial_straggled = simulate_serial(plan, straggled)
+        serial_straggled.mode = "serial_straggled"
+        for rep, baseline in ((serial, serial),
+                              (serial_straggled, serial_straggled),
+                              (pipelined, serial),
+                              (nowait, serial_straggled)):
+            rows.append({
+                "clients": K,
+                "mode": rep.mode,
+                "step_time_ms": rep.step_time_s * 1e3,
+                "speedup_vs_serial": baseline.step_time_s / rep.step_time_s,
+                "cut_bytes_per_client": rep.cut_bytes_per_client,
+                "deadline_misses": rep.total_misses,
+            })
+            _emit(f"runtime/{rep.mode}_k{K}", rep.step_time_s * 1e6,
+                  f"M=4 {baseline.step_time_s / rep.step_time_s:.2f}x_vs_serial")
+    out["runtime"] = rows
+
+
 def run_paper_tables(steps: int, out: dict) -> None:
     from benchmarks import paper_tables as pt
 
@@ -81,6 +126,7 @@ def main(argv=None) -> int:
     print("name,us_per_call,derived")
     out: dict = {}
     bench_kernels()
+    bench_runtime(out)
     steps = 400 if args.full else 60
     run_paper_tables(steps, out)
     if args.figures:
@@ -102,7 +148,7 @@ def main(argv=None) -> int:
         print("\n== roofline (from the dry-run matrix) ==")
         print(to_markdown(rows))
 
-    for name in ("table2", "table3", "table4", "table5", "table6"):
+    for name in ("runtime", "table2", "table3", "table4", "table5", "table6"):
         if name in out:
             print(f"\n== {name} ==")
             for row in out[name]:

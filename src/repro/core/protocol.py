@@ -44,11 +44,17 @@ class Ledger:
             Message(sender, receiver, tag, array.size * array.dtype.itemsize)
         )
 
+    def record_spec(self, spec: "MessageSpec", array) -> None:
+        self.record(spec.sender, spec.receiver, spec.tag, array)
+
     def sent_by(self, who: str) -> int:
         return sum(m.num_bytes for m in self.messages if m.sender == who)
 
     def received_by(self, who: str) -> int:
         return sum(m.num_bytes for m in self.messages if m.receiver == who)
+
+    def bytes_with_tag(self, tag: str) -> int:
+        return sum(m.num_bytes for m in self.messages if m.tag == tag)
 
     def total(self) -> int:
         return sum(m.num_bytes for m in self.messages)
@@ -56,6 +62,53 @@ class Ledger:
 
 def _role_of(client: int, label_holder: int) -> str:
     return "role3" if client == label_holder else "role1"
+
+
+# ---------------------------------------------------------------------------
+# message schedule (paper §4.4) — ONE definition shared by the serial
+# protocol_step below and the pipelined runtime (repro.runtime.engine)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MessageSpec:
+    """One protocol message, independent of any payload: who sends what to
+    whom.  ``client`` is the feature-holder index for cut/jac messages and
+    None for the role-0 <-> role-3 loss exchange."""
+
+    sender: str
+    receiver: str
+    tag: str
+    kind: str  # "cut" | "head_out" | "head_jac" | "jac"
+    client: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class StepSchedule:
+    """The per-step message schedule: K cut uplinks, the head/loss exchange,
+    K jacobian downlinks.  Serial execution walks it in order; the pipelined
+    runtime issues the same messages per microbatch, overlapped."""
+
+    cuts: tuple[MessageSpec, ...]
+    head_out: MessageSpec
+    head_jac: MessageSpec
+    jacs: tuple[MessageSpec, ...]
+
+
+def step_schedule(num_clients: int, label_holder: int = 0) -> StepSchedule:
+    cuts = tuple(
+        MessageSpec(_role_of(k, label_holder), "role0", f"cut[{k}]", "cut", k)
+        for k in range(num_clients)
+    )
+    jacs = tuple(
+        MessageSpec("role0", _role_of(k, label_holder), f"jac[{k}]", "jac", k)
+        for k in range(num_clients)
+    )
+    return StepSchedule(
+        cuts=cuts,
+        head_out=MessageSpec("role0", "role3", "head_output", "head_out"),
+        head_jac=MessageSpec("role3", "role0", "head_jacobian", "head_jac"),
+        jacs=jacs,
+    )
 
 
 def protocol_step(
@@ -80,12 +133,13 @@ def protocol_step(
     """
     K = len(tower_params)
     ledger = ledger if ledger is not None else Ledger()
+    schedule = step_schedule(K, label_holder)
 
     # --- clients forward: role 1/3 -> role 0 -------------------------------
     cuts = []
-    for k in range(K):
-        cut_k = tower_fwd(tower_params[k], features[k])
-        ledger.record(_role_of(k, label_holder), "role0", f"cut[{k}]", cut_k)
+    for spec in schedule.cuts:
+        cut_k = tower_fwd(tower_params[spec.client], features[spec.client])
+        ledger.record_spec(spec, cut_k)
         cuts.append(cut_k)
     stacked = jnp.stack(cuts)
 
@@ -98,15 +152,16 @@ def protocol_step(
     (loss, logits), (server_grads, cut_grads) = jax.value_and_grad(
         server_loss, argnums=(0, 1), has_aux=True
     )(server_params, stacked)
-    ledger.record("role0", "role3", "head_output", logits)
-    ledger.record("role3", "role0", "head_jacobian", logits)
+    ledger.record_spec(schedule.head_out, logits)
+    ledger.record_spec(schedule.head_jac, logits)
 
     # --- jacobian splitting: role 0 -> each client --------------------------
     tower_grads = []
-    for k in range(K):
-        ledger.record("role0", _role_of(k, label_holder), f"jac[{k}]", cut_grads[k])
+    for spec in schedule.jacs:
+        k = spec.client
+        ledger.record_spec(spec, cut_grads[k])
 
-        def tower_obj(tp):
+        def tower_obj(tp, k=k):
             return jnp.vdot(
                 tower_fwd(tp, features[k]).astype(jnp.float32),
                 cut_grads[k].astype(jnp.float32),

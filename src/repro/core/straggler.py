@@ -29,18 +29,20 @@ def init_ema_state(cfg: MLPSplitConfig, dtype=jnp.float32):
     }
 
 
-def impute_and_merge(
+def impute_stack(
     cuts: jnp.ndarray,  # (K, B, cut_dim) — dropped rows are garbage/zero
     live_mask: jnp.ndarray,  # (K,)
     ema_state: dict,
-    merge: str,
     *,
     decay: float = 0.95,
 ):
-    """Returns (merged, new_ema_state).
+    """Returns (imputed_cuts, new_ema_state) — the EMA bookkeeping without
+    the merge, so callers (e.g. the pipelined runtime's no-wait mode) can
+    feed the filled stack to any merge implementation, including the fused
+    ``kernels.merge_pool`` fast path.
 
     Live clients update the EMA; dropped clients are REPLACED by their EMA
-    (broadcast over the batch) and the merge then sees every seat filled —
+    (broadcast over the batch) so the merge then sees every seat filled —
     no neutral-element distortion.
     """
     K, B, D = cuts.shape
@@ -59,8 +61,21 @@ def impute_and_merge(
     imputed = jnp.where(
         lv > 0, cuts, jnp.broadcast_to(new_ema[:, None, :], cuts.shape)
     )
+    return imputed, {"ema": new_ema, "initialized": new_init}
+
+
+def impute_and_merge(
+    cuts: jnp.ndarray,  # (K, B, cut_dim) — dropped rows are garbage/zero
+    live_mask: jnp.ndarray,  # (K,)
+    ema_state: dict,
+    merge: str,
+    *,
+    decay: float = 0.95,
+):
+    """Returns (merged, new_ema_state); see :func:`impute_stack`."""
+    imputed, new_state = impute_stack(cuts, live_mask, ema_state, decay=decay)
     merged = merge_lib.merge_stacked(imputed, merge)  # all seats filled
-    return merged, {"ema": new_ema, "initialized": new_init}
+    return merged, new_state
 
 
 def make_imputing_train_step(cfg: MLPSplitConfig, optimizer, *,

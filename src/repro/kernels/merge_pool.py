@@ -23,7 +23,8 @@ NEG_INF = -3.0e38
 
 def _merge_kernel(stacked_ref, live_ref, out_ref, *, strategy: str, k: int):
     live = live_ref[...]  # (K,) f32
-    n_live = jnp.maximum(jnp.sum(live), 1.0)
+    total_live = jnp.sum(live)
+    n_live = jnp.maximum(total_live, 1.0)
 
     def neutral(val, l, fill):
         return jnp.where(l > 0, val, jnp.asarray(fill, val.dtype))
@@ -44,7 +45,9 @@ def _merge_kernel(stacked_ref, live_ref, out_ref, *, strategy: str, k: int):
     if strategy == "avg":
         acc = acc / n_live
     if strategy == "max":
-        acc = jnp.where(n_live > 0, acc, jnp.zeros_like(acc))
+        # all clients dropped -> zeros, not -inf (raw count: n_live is
+        # clamped to >=1 for the avg division and would never hit 0 here)
+        acc = jnp.where(total_live > 0, acc, jnp.zeros_like(acc))
     out_ref[...] = acc.astype(out_ref.dtype)
 
 
@@ -79,6 +82,15 @@ def _merge_bwd_kernel(stacked_ref, live_ref, out_ref, g_ref, dx_ref, *,
     n_live = jnp.maximum(jnp.sum(live), 1.0)
     g = g_ref[...].astype(jnp.float32)
     out = out_ref[...].astype(jnp.float32)
+    if strategy == "max":
+        # tie count per element so credit SPLITS among argmax holders —
+        # matches autodiff through the jnp oracle (ties are common in bf16)
+        ties = None
+        for i in range(k):
+            x = stacked_ref[i].astype(jnp.float32)
+            eq = jnp.where((x == out) & (live[i] > 0), 1.0, 0.0)
+            ties = eq if ties is None else ties + eq
+        ties = jnp.maximum(ties, 1.0)
     for i in range(k):
         l = live[i]
         if strategy == "sum":
@@ -87,7 +99,7 @@ def _merge_bwd_kernel(stacked_ref, live_ref, out_ref, g_ref, dx_ref, *,
             dx = g * (l / n_live)
         elif strategy == "max":
             x = stacked_ref[i].astype(jnp.float32)
-            dx = jnp.where((x == out) & (l > 0), g, 0.0)
+            dx = jnp.where((x == out) & (l > 0), g / ties, 0.0)
         else:  # mul
             x = jnp.where(live[i] > 0, stacked_ref[i].astype(jnp.float32), 1.0)
             dx = g * (out / x) * l

@@ -12,6 +12,15 @@ Examples:
   # centralized baseline (paper Table 2 comparison):
   PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --scale 100m \\
       --vertical off --steps 300
+
+  # pipelined split-training runtime: 4 microbatches, simulated federation
+  # clock in the summary (see repro.runtime for the execution model):
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \\
+      --steps 20 --runtime pipelined --microbatches 4
+
+  # bounded-staleness no-wait mode with a 10x straggler on client 1:
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \\
+      --steps 20 --runtime nowait --microbatches 4 --straggler 1
 """
 from __future__ import annotations
 
@@ -50,6 +59,38 @@ def scale_config(cfg, scale: str):
     return dataclasses.replace(cfg, **fields)
 
 
+def _runtime_report(cfg, args) -> dict:
+    """Clock one training step of the chosen --runtime schedule on the
+    default federation link model (repro.runtime); pure simulation, the
+    jitted train loop above is unaffected."""
+    from repro.runtime import (LinkModel, plan_from_arch, simulate_pipelined,
+                               simulate_serial)
+
+    M = args.microbatches if args.runtime != "serial" else 1
+    plan = plan_from_arch(cfg, args.batch, args.seq, M)
+    link = LinkModel.uniform(cfg.vertical.num_clients)
+    if args.straggler is not None:
+        link = link.with_straggler(args.straggler, slowdown=10.0)
+    serial_s = simulate_serial(plan, link).step_time_s
+    if args.runtime == "serial":
+        report = {"mode": "serial", "step_time_s": serial_s}
+    else:
+        sim = simulate_pipelined(plan, link, mode=args.runtime)
+        report = {
+            "mode": sim.mode,
+            "step_time_s": sim.step_time_s,
+            "speedup_vs_serial": serial_s / sim.step_time_s,
+            "microbatches": sim.microbatches,
+            "deadline_misses": sim.total_misses,
+            "cut_bytes_per_client": sim.cut_bytes_per_client,
+        }
+    print(f"runtime[{args.runtime}] simulated step "
+          f"{report['step_time_s']*1e3:.2f} ms"
+          + (f" ({report['speedup_vs_serial']:.2f}x vs serial)"
+             if "speedup_vs_serial" in report else ""))
+    return report
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
@@ -68,6 +109,13 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--json", default=None, help="write metrics json here")
+    ap.add_argument("--runtime", default="serial",
+                    choices=["serial", "pipelined", "nowait"],
+                    help="split-training schedule to clock (repro.runtime)")
+    ap.add_argument("--microbatches", type=int, default=4,
+                    help="pipeline depth for --runtime pipelined/nowait")
+    ap.add_argument("--straggler", type=int, default=None,
+                    help="degrade this client 10x in the runtime simulation")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -85,6 +133,28 @@ def main(argv=None):
         )
         cfg = cfg.with_vertical(v)
 
+    if cfg.vertical is None and (args.runtime != "serial"
+                                 or args.straggler is not None):
+        raise SystemExit(
+            f"--runtime {args.runtime}/--straggler need a vertical config; "
+            "this run is centralized (--vertical off or arch without one)"
+        )
+    if cfg.vertical is not None:
+        # fail fast — the runtime report renders after training finishes
+        if args.microbatches < 1:
+            raise SystemExit(f"--microbatches must be >= 1, got {args.microbatches}")
+        if args.runtime != "serial" and args.batch % args.microbatches:
+            raise SystemExit(
+                f"--batch {args.batch} not divisible by "
+                f"--microbatches {args.microbatches}"
+            )
+        if args.straggler is not None and not (
+                0 <= args.straggler < cfg.vertical.num_clients):
+            raise SystemExit(
+                f"--straggler {args.straggler} out of range for "
+                f"{cfg.vertical.num_clients} clients"
+            )
+
     from repro.models.backbone import param_count
 
     n_params = param_count(cfg)
@@ -98,6 +168,8 @@ def main(argv=None):
     summary = metrics.summary()
     summary.update(arch=cfg.name, params=n_params, steps=args.steps,
                    vertical=args.vertical)
+    if cfg.vertical is not None:
+        summary["runtime"] = _runtime_report(cfg, args)
     print(json.dumps(summary, indent=1))
     if args.json:
         with open(args.json, "w") as f:

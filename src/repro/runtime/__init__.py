@@ -1,0 +1,55 @@
+"""Async pipelined split-training runtime.
+
+The paper's protocol (§4.4) is a *schedule*: feature-holders ship cut
+activations to the role-0 server, which merges, runs the head, and returns
+jacobians.  ``repro.core.protocol.protocol_step`` executes that schedule
+strictly serially — simulated step time is the sum of every client forward
+plus server compute.  This package executes the SAME schedule (one
+``step_schedule`` definition, one ``Ledger``) on a discrete-event clock
+with per-link latency/bandwidth, overlapping client forwards, cut
+transfers, the fused merge, and server compute across M microbatches.
+
+Three runtimes (``--runtime`` on repro.launch.train):
+
+* ``serial``    — the paper's schedule as written; baseline clock.
+* ``pipelined`` — microbatch pipelining at staleness 0.  Gradients are
+  identical to ``protocol_step`` (tests assert to 1e-5); only the clock
+  improves — ~K x on the client terms plus transfer/compute overlap.
+* ``nowait``    — bounded staleness: a client whose cut misses the
+  deadline is imputed from its EMA (repro.core.straggler) and skips that
+  microbatch's jacobian; a straggler can never stall the step.
+
+Layout: ``links`` (per-link latency/bandwidth + compute rates),
+``clock`` (event heap + FIFO resources), ``engine`` (StepPlan,
+simulate_serial / simulate_pipelined, and the pipelined_step numerics).
+Benchmarks: ``python -m benchmarks.run`` has a runtime section sweeping
+serial vs pipelined vs no-wait at K in {2, 4, 8}.
+"""
+from repro.runtime.clock import EventClock, Resource
+from repro.runtime.engine import (
+    MODES,
+    SimReport,
+    StepPlan,
+    default_deadline_s,
+    pipelined_step,
+    plan_from_arch,
+    plan_step,
+    simulate_pipelined,
+    simulate_serial,
+)
+from repro.runtime.links import LinkModel
+
+__all__ = [
+    "EventClock",
+    "Resource",
+    "LinkModel",
+    "MODES",
+    "SimReport",
+    "StepPlan",
+    "default_deadline_s",
+    "pipelined_step",
+    "plan_from_arch",
+    "plan_step",
+    "simulate_pipelined",
+    "simulate_serial",
+]

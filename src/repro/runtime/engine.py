@@ -1,0 +1,466 @@
+"""Microbatch-pipelined split-training engine over a discrete-event clock.
+
+Execution model (one training step, M microbatches, K clients):
+
+* every client streams tower forwards for microbatches 0..M-1 on its own
+  CPU resource and ships each cut activation over its own uplink;
+* the role-0 server merges a microbatch as soon as its cuts are in
+  (``kernels.merge_pool`` fast path for the reduction merges), runs the
+  server network forward, exchanges the head output/jacobian with role 3,
+  backprops, and returns per-client cut jacobians on the downlinks;
+* clients backprop their towers as jacobians arrive, interleaved with
+  later forwards on the same CPU resource.
+
+Modes:
+
+* ``"pipelined"`` — staleness 0: the server waits for all K cuts of a
+  microbatch.  Gradients are identical to the serial ``protocol_step``
+  (asserted in tests/test_runtime.py); only the clock differs.
+* ``"nowait"`` — bounded staleness: the server starts a microbatch at
+  ``deadline_s`` after its first cut arrives; late clients are imputed
+  from their EMA (repro.core.straggler) and skip that microbatch's
+  jacobian, so a straggler can never stall the step.
+
+The message schedule is THE schedule from repro.core.protocol
+(``step_schedule``) — serial and pipelined paths share it and the same
+:class:`~repro.core.protocol.Ledger`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.vertical_mlp import MLPSplitConfig
+from repro.core import merge as merge_lib
+from repro.core import straggler as straggler_lib
+from repro.core.costs import mlp_forward_flops
+from repro.core.merge import collective_bytes_per_merge, merged_dim
+from repro.core.protocol import Ledger, step_schedule
+from repro.runtime.clock import EventClock, Resource
+from repro.runtime.links import LinkModel
+
+MODES = ("serial", "pipelined", "nowait")
+
+
+# ---------------------------------------------------------------------------
+# step plan: how much work/traffic one microbatch contains
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class StepPlan:
+    """Per-microbatch work and traffic; pure counts, no rates (rates live in
+    :class:`~repro.runtime.links.LinkModel` so one plan can be simulated
+    under many network scenarios)."""
+
+    num_clients: int
+    microbatches: int
+    tower_fwd_flops: tuple[float, ...]  # per client, per microbatch
+    tower_bwd_flops: tuple[float, ...]
+    server_flops: float  # merge + server fwd + bwd, per microbatch
+    cut_bytes: int  # per client, per microbatch
+    head_bytes: int  # per direction, per microbatch
+    merge: str = "avg"
+    cut_elements: int = 0  # per client per microbatch (for collective model)
+    bytes_per_elt: int = 4
+    label_holder: int = 0
+
+
+def plan_step(cfg: MLPSplitConfig, batch_size: int, microbatches: int = 1,
+              *, bytes_per_elt: int = 4) -> StepPlan:
+    """Build a :class:`StepPlan` from the paper-MLP config using the same
+    analytic FLOP model as repro.core.costs (Tables 5 & 6)."""
+    if batch_size % microbatches:
+        raise ValueError(f"batch {batch_size} not divisible by M={microbatches}")
+    mb = batch_size // microbatches
+    fwd = tuple(
+        float(mlp_forward_flops([fs, *cfg.tower_hidden, cfg.cut_dim], mb))
+        for fs in cfg.client_feature_sizes
+    )
+    server_in = merged_dim(cfg.merge, cfg.cut_dim, cfg.num_clients)
+    server_fwd = mlp_forward_flops(
+        [server_in, *cfg.server_hidden, cfg.num_classes], mb
+    )
+    return StepPlan(
+        num_clients=cfg.num_clients,
+        microbatches=microbatches,
+        tower_fwd_flops=fwd,
+        tower_bwd_flops=tuple(2.0 * f for f in fwd),  # dL/dx + dL/dW
+        server_flops=3.0 * server_fwd,
+        cut_bytes=mb * cfg.cut_dim * bytes_per_elt,
+        head_bytes=mb * cfg.num_classes * bytes_per_elt,
+        merge=cfg.merge,
+        cut_elements=mb * cfg.cut_dim,
+        bytes_per_elt=bytes_per_elt,
+    )
+
+
+def plan_from_arch(cfg, batch_size: int, seq_len: int, microbatches: int = 1,
+                   *, bytes_per_elt: int = 4) -> StepPlan:
+    """StepPlan for a vertically-split LM arch (repro.configs.base.ArchConfig).
+
+    Towers are ``tower_layers`` transformer blocks at width d_model/K; the
+    cut activation is (tokens, d_model/K).  Per-layer FLOPs/token use the
+    standard 2*(4 d^2 + 2 d d_ff) dense estimate.  The role-3 exchange is
+    modeled at per-token-loss granularity (not full-vocab logits): the
+    label holder returns loss jacobian summaries, labels ship out of band.
+    """
+    v = cfg.vertical
+    if v is None:
+        raise ValueError(f"{cfg.name} has no vertical config")
+    if batch_size % microbatches:
+        raise ValueError(f"batch {batch_size} not divisible by M={microbatches}")
+    K = v.num_clients
+    tokens = (batch_size // microbatches) * seq_len
+    d_t, ff_t = cfg.d_model // K, (cfg.d_ff or cfg.d_model * 4) // K
+
+    def block_flops(d, ff):
+        return 2 * (4 * d * d + 2 * d * ff)
+
+    tower = float(v.tower_layers * block_flops(d_t, ff_t) * tokens)
+    server_layers = max(cfg.num_layers - v.tower_layers, 1)
+    server_fwd = (
+        server_layers * block_flops(cfg.d_model, cfg.d_ff or cfg.d_model * 4)
+        + 2 * cfg.d_model * cfg.vocab_size
+    ) * tokens
+    return StepPlan(
+        num_clients=K,
+        microbatches=microbatches,
+        tower_fwd_flops=(tower,) * K,
+        tower_bwd_flops=(2.0 * tower,) * K,
+        server_flops=3.0 * server_fwd,
+        cut_bytes=tokens * d_t * bytes_per_elt,
+        head_bytes=tokens * bytes_per_elt,
+        merge=v.merge,
+        cut_elements=tokens * d_t,
+        bytes_per_elt=bytes_per_elt,
+    )
+
+
+def default_deadline_s(plan: StepPlan, link: LinkModel) -> float:
+    """No-wait grace window after the first cut arrives: as long again as
+    the fastest client's forward+uplink path.  Healthy peers make it; a
+    multiple-x straggler misses and gets imputed."""
+    return min(
+        link.client_compute_s(k, plan.tower_fwd_flops[k])
+        + link.transfer_s(k, plan.cut_bytes)
+        for k in range(plan.num_clients)
+    )
+
+
+# ---------------------------------------------------------------------------
+# simulation
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SimReport:
+    mode: str
+    step_time_s: float
+    microbatches: int
+    live: list[list[float]]  # (M, K) — 1.0 = client's cut made the merge
+    misses_per_client: list[int]
+    cut_bytes_per_client: int  # uplink bytes per client for the full step
+    collective_bytes_per_client: int  # analytic all-reduce/all-gather model
+    server_busy_s: float = 0.0
+
+    @property
+    def total_misses(self) -> int:
+        return sum(self.misses_per_client)
+
+
+def _report_skeleton(plan: StepPlan, mode: str) -> SimReport:
+    M, K = plan.microbatches, plan.num_clients
+    return SimReport(
+        mode=mode,
+        step_time_s=0.0,
+        microbatches=M,
+        live=[[1.0] * K for _ in range(M)],
+        misses_per_client=[0] * K,
+        cut_bytes_per_client=plan.cut_bytes * M,
+        collective_bytes_per_client=M * collective_bytes_per_merge(
+            plan.merge, plan.cut_elements, K, plan.bytes_per_elt
+        ),
+    )
+
+
+def simulate_serial(plan: StepPlan, link: LinkModel) -> SimReport:
+    """Clock the serial ``protocol_step`` schedule: every phase completes
+    before the next begins, clients one after another, full batch at once
+    (so per-microbatch quantities scale by M but each link pays its latency
+    once per message, not once per microbatch)."""
+    M, K = plan.microbatches, plan.num_clients
+    t = 0.0
+    for k in range(K):
+        t += link.client_compute_s(k, plan.tower_fwd_flops[k] * M)
+    for k in range(K):
+        t += link.transfer_s(k, plan.cut_bytes * M)
+    t += link.server_compute_s(plan.server_flops * M)
+    t += 2 * link.transfer_s(plan.label_holder, plan.head_bytes * M)
+    for k in range(K):
+        t += link.transfer_s(k, plan.cut_bytes * M)
+        t += link.client_compute_s(k, plan.tower_bwd_flops[k] * M)
+    report = _report_skeleton(plan, "serial")
+    report.step_time_s = t
+    report.server_busy_s = link.server_compute_s(plan.server_flops * M)
+    return report
+
+
+def simulate_pipelined(
+    plan: StepPlan,
+    link: LinkModel,
+    *,
+    mode: str = "pipelined",
+    deadline_s: Optional[float] = None,
+) -> SimReport:
+    """Event-driven makespan of the overlapped schedule; see module doc."""
+    if mode not in ("pipelined", "nowait"):
+        raise ValueError(f"mode must be pipelined|nowait, got {mode!r}")
+    if link.num_clients != plan.num_clients:
+        raise ValueError("link model and plan disagree on K")
+    if mode == "nowait" and deadline_s is None:
+        deadline_s = default_deadline_s(plan, link)
+
+    M, K = plan.microbatches, plan.num_clients
+    clock = EventClock()
+    client_cpu = [Resource(f"client{k}/cpu") for k in range(K)]
+    uplink = [Resource(f"client{k}/up") for k in range(K)]
+    downlink = [Resource(f"client{k}/down") for k in range(K)]
+    server = Resource("server")
+
+    arrived: list[dict[int, float]] = [{} for _ in range(M)]
+    started = [False] * M
+    report = _report_skeleton(plan, mode)
+    done_t = [0.0]
+
+    def finish_at(t: float) -> None:
+        done_t[0] = max(done_t[0], t)
+
+    def client_fwd(k: int, m: int) -> None:
+        _, end = client_cpu[k].acquire(clock.now, link.client_compute_s(
+            k, plan.tower_fwd_flops[k]))
+        clock.post(end, lambda: send_cut(k, m))
+        if m + 1 < M:  # stream the next microbatch immediately
+            clock.post(end, lambda: client_fwd(k, m + 1))
+
+    def send_cut(k: int, m: int) -> None:
+        _, end = uplink[k].acquire(clock.now, link.transfer_s(k, plan.cut_bytes))
+        clock.post(end, lambda: arrive_cut(k, m))
+
+    def arrive_cut(k: int, m: int) -> None:
+        if started[m]:  # missed the no-wait deadline: discarded at role 0
+            return
+        arrived[m][k] = clock.now
+        if len(arrived[m]) == K:
+            start_server(m)
+        elif mode == "nowait" and len(arrived[m]) == 1:
+            clock.post_in(deadline_s, lambda: hit_deadline(m))
+
+    def hit_deadline(m: int) -> None:
+        if not started[m]:
+            start_server(m)
+
+    def start_server(m: int) -> None:
+        started[m] = True
+        for k in range(K):
+            if k not in arrived[m]:
+                report.live[m][k] = 0.0
+                report.misses_per_client[k] += 1
+        # merge + server forward (1/3 of the server flops; bwd is the other 2/3)
+        _, end = server.acquire(clock.now, link.server_compute_s(plan.server_flops / 3))
+        clock.post(end, lambda: head_exchange(m))
+
+    def head_exchange(m: int) -> None:
+        # head output -> role 3 on the label-holder's downlink; the server
+        # is FREE to forward the next microbatch meanwhile
+        lh = plan.label_holder
+        _, end = downlink[lh].acquire(
+            clock.now, link.transfer_s(lh, plan.head_bytes))
+        clock.post(end, lambda: head_return(m))
+
+    def head_return(m: int) -> None:
+        # head jacobian back on the label-holder's uplink (contends with
+        # its own cut uplinks)
+        lh = plan.label_holder
+        _, end = uplink[lh].acquire(
+            clock.now, link.transfer_s(lh, plan.head_bytes))
+        clock.post(end, lambda: server_bwd(m))
+
+    def server_bwd(m: int) -> None:
+        _, end = server.acquire(clock.now, link.server_compute_s(2 * plan.server_flops / 3))
+        finish_at(end)
+        clock.post(end, lambda: server_done(m))
+
+    def server_done(m: int) -> None:
+        for k in range(K):
+            if report.live[m][k] > 0:
+                clock.post(clock.now, lambda k=k, m=m: send_jac(k, m))
+
+    def send_jac(k: int, m: int) -> None:
+        _, end = downlink[k].acquire(clock.now, link.transfer_s(k, plan.cut_bytes))
+        clock.post(end, lambda: client_bwd(k, m))
+
+    def client_bwd(k: int, m: int) -> None:
+        _, end = client_cpu[k].acquire(clock.now, link.client_compute_s(
+            k, plan.tower_bwd_flops[k]))
+        finish_at(end)
+
+    for k in range(K):
+        clock.post(0.0, lambda k=k: client_fwd(k, 0))
+    clock.run()
+
+    report.step_time_s = done_t[0]
+    report.server_busy_s = server.busy_s
+    return report
+
+
+# ---------------------------------------------------------------------------
+# numerics: the pipelined/no-wait protocol step
+# ---------------------------------------------------------------------------
+
+def _fast_merge(stacked: jnp.ndarray, strategy: str) -> jnp.ndarray:
+    """merge_pool fast path for the reduction merges (ops.py dispatches the
+    fused Pallas kernel on TPU, the jnp oracle elsewhere); concat is a
+    layout op and stays on merge_stacked."""
+    if strategy == "concat":
+        return merge_lib.merge_stacked(stacked, strategy)
+    from repro.kernels import ops
+
+    return ops.merge_pool(stacked, strategy=strategy)
+
+
+def _tree_mean(trees):
+    return jax.tree_util.tree_map(
+        lambda *leaves: sum(leaves) / len(leaves), *trees
+    )
+
+
+def pipelined_step(
+    tower_fwd: Callable,
+    server_fwd: Callable,
+    loss_fn: Callable,
+    tower_params: list,
+    server_params,
+    features: list[jnp.ndarray],
+    labels: jnp.ndarray,
+    merge: str,
+    *,
+    microbatches: int = 1,
+    mode: str = "pipelined",
+    label_holder: int = 0,
+    link: Optional[LinkModel] = None,
+    plan: Optional[StepPlan] = None,
+    deadline_s: Optional[float] = None,
+    ema_state: Optional[dict] = None,
+    ema_decay: float = 0.95,
+    ledger: Optional[Ledger] = None,
+):
+    """One pipelined training step; drop-in sibling of ``protocol_step``.
+
+    Returns (loss, tower_grads, server_grads, ledger, report, ema_state).
+
+    At ``mode="pipelined"`` the result equals ``protocol_step`` on the same
+    inputs (microbatch gradient averaging == full-batch gradients for the
+    mean losses used here); ``mode="nowait"`` additionally needs ``link``
+    (who misses a deadline is a property of the network) and an
+    ``ema_state`` for imputation (one is created if absent).
+    """
+    if mode not in ("pipelined", "nowait"):
+        raise ValueError(f"mode must be pipelined|nowait, got {mode!r}")
+    K = len(tower_params)
+    M = microbatches
+    B = features[0].shape[0]
+    if B % M:
+        raise ValueError(f"batch {B} not divisible by microbatches={M}")
+    mb = B // M
+
+    ledger = ledger if ledger is not None else Ledger()
+    schedule = step_schedule(K, label_holder)
+    if plan is None:
+        # timing-only default; callers with a real config should pass
+        # plan_step(cfg, ...) so the FLOP model matches costs.py
+        cut_probe = tower_fwd(tower_params[0], features[0][:1])
+        cut_dim = cut_probe.shape[-1]
+        fwd = tuple(
+            float(mlp_forward_flops([f.shape[-1], cut_dim], mb))
+            for f in features
+        )
+        plan = StepPlan(
+            num_clients=K, microbatches=M, tower_fwd_flops=fwd,
+            tower_bwd_flops=tuple(2.0 * f for f in fwd),
+            # server modeled as one dense layer off the merged width
+            server_flops=3.0 * mlp_forward_flops(
+                [merged_dim(merge, cut_dim, K), cut_dim], mb),
+            cut_bytes=mb * cut_dim * 4, head_bytes=mb * 4,
+            merge=merge, cut_elements=mb * cut_dim, label_holder=label_holder,
+        )
+    if link is None:
+        link = LinkModel.uniform(K)
+    report = simulate_pipelined(plan, link, mode=mode, deadline_s=deadline_s)
+
+    if mode == "nowait" and ema_state is None:
+        cut_dim = plan.cut_elements // mb
+        ema_state = {
+            "ema": jnp.zeros((K, cut_dim), jnp.float32),
+            "initialized": jnp.zeros((K,), jnp.float32),
+        }
+
+    losses, tower_grad_acc, server_grad_acc = [], [], []
+    for m in range(M):
+        sl = slice(m * mb, (m + 1) * mb)
+        feats_m = [f[sl] for f in features]
+        labels_m = labels[sl]
+        live = jnp.asarray(report.live[m], jnp.float32)
+
+        cuts = []
+        for spec in schedule.cuts:
+            cut_k = tower_fwd(tower_params[spec.client], feats_m[spec.client])
+            ledger.record_spec(spec, cut_k)  # sent even if it arrives late
+            cuts.append(cut_k)
+        stacked = jnp.stack(cuts)
+
+        def server_loss(server_p, stacked_cuts):
+            if mode == "nowait":
+                imputed, new_ema = straggler_lib.impute_stack(
+                    stacked_cuts, live, ema_state, decay=ema_decay
+                )
+                merged = _fast_merge(imputed, merge)
+            else:
+                new_ema = ema_state
+                merged = _fast_merge(stacked_cuts, merge)
+            logits = server_fwd(server_p, merged)
+            return loss_fn(logits, labels_m), (logits, new_ema)
+
+        (loss_m, (logits, ema_state)), (sg, cut_grads) = jax.value_and_grad(
+            server_loss, argnums=(0, 1), has_aux=True
+        )(server_params, stacked)
+        ledger.record_spec(schedule.head_out, logits)
+        ledger.record_spec(schedule.head_jac, logits)
+
+        tg_m = []
+        for spec in schedule.jacs:
+            k = spec.client
+            if report.live[m][k] > 0:
+                ledger.record_spec(spec, cut_grads[k])
+
+                def tower_obj(tp, k=k):
+                    return jnp.vdot(
+                        tower_fwd(tp, feats_m[k]).astype(jnp.float32),
+                        cut_grads[k].astype(jnp.float32),
+                    )
+
+                tg_m.append(jax.grad(tower_obj)(tower_params[k]))
+            else:  # missed the deadline: no jacobian, no update this microbatch
+                tg_m.append(jax.tree_util.tree_map(
+                    jnp.zeros_like, tower_params[k]))
+        losses.append(loss_m)
+        tower_grad_acc.append(tg_m)
+        server_grad_acc.append(sg)
+
+    loss = sum(losses) / M
+    tower_grads = [
+        _tree_mean([tower_grad_acc[m][k] for m in range(M)]) for k in range(K)
+    ]
+    server_grads = _tree_mean(server_grad_acc)
+    return loss, tower_grads, server_grads, ledger, report, ema_state

@@ -3,7 +3,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.models import attention as attn
 
@@ -16,15 +15,12 @@ def _qkv(B, Sq, Skv, H, Kv, D, seed=0):
     return q, k, v
 
 
-@settings(max_examples=10, deadline=None)
-@given(
-    h=st.sampled_from([4, 8]),
-    kv=st.sampled_from([1, 2, 4]),
-    s=st.sampled_from([64, 128]),
-    qc=st.sampled_from([16, 32]),
-    causal=st.booleans(),
-    seed=st.integers(0, 99),
-)
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("h,kv,s,qc,seed", [
+    (4, 1, 64, 16, 0),   # MQA
+    (4, 2, 128, 32, 1),  # GQA
+    (8, 8, 64, 16, 2),   # MHA, full kv
+])
 def test_chunked_equals_dense(h, kv, s, qc, causal, seed):
     q, k, v = _qkv(2, s, s, h, kv, 16, seed)
     pos = jnp.arange(s)
@@ -34,6 +30,33 @@ def test_chunked_equals_dense(h, kv, s, qc, causal, seed):
                                            q_positions=pos, kv_positions=pos,
                                            q_chunk=qc, kv_chunk=qc)
     np.testing.assert_allclose(chunked, dense, rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_equals_dense_hypothesis_sweep():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        h=st.sampled_from([4, 8]),
+        kv=st.sampled_from([1, 2, 4]),
+        s=st.sampled_from([64, 128]),
+        qc=st.sampled_from([16, 32]),
+        causal=st.booleans(),
+        seed=st.integers(0, 99),
+    )
+    def prop(h, kv, s, qc, causal, seed):
+        q, k, v = _qkv(2, s, s, h, kv, 16, seed)
+        pos = jnp.arange(s)
+        dense = attn.dense_attention(q, k, v, causal=causal, q_positions=pos,
+                                     kv_positions=pos)
+        chunked = attn.chunked_flash_attention(q, k, v, causal=causal,
+                                               q_positions=pos,
+                                               kv_positions=pos,
+                                               q_chunk=qc, kv_chunk=qc)
+        np.testing.assert_allclose(chunked, dense, rtol=2e-4, atol=2e-4)
+
+    prop()
 
 
 def test_sliding_window_equals_dense_window():

@@ -83,8 +83,9 @@ SCRIPT = textwrap.dedent("""
     for line in txt.splitlines():
         if not any(k in line for k in kinds):
             continue
-        if "while/body" not in line:
+        if not re.search(r"while\\)?/body", line):
             continue  # only the tower layer scan is privacy-bearing
+            # (newer jax spells the vmapped scan "vmap(while)/body")
         groups = parse_groups(line)
         if not groups:
             continue

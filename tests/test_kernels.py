@@ -1,10 +1,9 @@
 """Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles,
-hypothesis shape/dtype sweeps."""
+parametrized core cases + hypothesis shape/dtype sweeps."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention
@@ -16,18 +15,12 @@ from repro.models import mamba as mamba_lib
 # merge_pool
 # ---------------------------------------------------------------------------
 
-@settings(max_examples=12, deadline=None)
-@given(
-    k=st.integers(2, 5),
-    b=st.sampled_from([8, 32, 100]),
-    d=st.sampled_from([128, 256, 384]),
-    strategy=st.sampled_from(["sum", "avg", "max", "mul"]),
-    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
-    seed=st.integers(0, 99),
-)
-def test_merge_pool_matches_ref(k, b, d, strategy, dtype, seed):
-    x = jax.random.normal(jax.random.PRNGKey(seed), (k, b, d), dtype)
-    live = (jax.random.uniform(jax.random.PRNGKey(seed + 1), (k,)) > 0.3)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("strategy", ["sum", "avg", "max", "mul"])
+@pytest.mark.parametrize("k,b,d", [(2, 8, 128), (4, 32, 256), (5, 100, 384)])
+def test_merge_pool_matches_ref(k, b, d, strategy, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(k * 7 + d), (k, b, d), dtype)
+    live = (jax.random.uniform(jax.random.PRNGKey(k * 7 + d + 1), (k,)) > 0.3)
     live = live.at[0].set(True).astype(jnp.float32)
     got = merge_pool(x, live, strategy=strategy, block_b=32, block_d=128,
                      interpret=True)
@@ -36,6 +29,35 @@ def test_merge_pool_matches_ref(k, b, d, strategy, dtype, seed):
     np.testing.assert_allclose(
         got.astype(jnp.float32), want.astype(jnp.float32), rtol=tol, atol=tol
     )
+
+
+def test_merge_pool_matches_ref_hypothesis_sweep():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        k=st.integers(2, 5),
+        b=st.sampled_from([8, 32, 100]),
+        d=st.sampled_from([128, 256, 384]),
+        strategy=st.sampled_from(["sum", "avg", "max", "mul"]),
+        dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+        seed=st.integers(0, 99),
+    )
+    def prop(k, b, d, strategy, dtype, seed):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (k, b, d), dtype)
+        live = (jax.random.uniform(jax.random.PRNGKey(seed + 1), (k,)) > 0.3)
+        live = live.at[0].set(True).astype(jnp.float32)
+        got = merge_pool(x, live, strategy=strategy, block_b=32, block_d=128,
+                         interpret=True)
+        want = ref.merge_pool(x, strategy, live)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+        np.testing.assert_allclose(
+            got.astype(jnp.float32), want.astype(jnp.float32), rtol=tol,
+            atol=tol
+        )
+
+    prop()
 
 
 @pytest.mark.parametrize("strategy", ["sum", "avg", "max", "mul"])
@@ -56,6 +78,58 @@ def test_merge_pool_backward_kernel_matches_autodiff(strategy):
     np.testing.assert_allclose(gk, gr, rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("strategy", ["sum", "avg", "max", "mul"])
+def test_merge_pool_backward_all_strategies_vs_oracle(strategy, dtype):
+    """Backward vs the merge_stacked jnp oracle for every strategy,
+    including a bf16 stack (the kernel accumulates in f32 and casts the
+    jacobian back to the input dtype)."""
+    from repro.core import merge as merge_lib
+
+    x = jax.random.normal(jax.random.PRNGKey(3), (3, 16, 128), dtype)
+    live = jnp.array([1.0, 0.0, 1.0])
+    w = jax.random.normal(jax.random.PRNGKey(4), (128,))
+
+    def k_loss(t):
+        out = merge_pool(t, live, strategy=strategy, block_b=16, block_d=128,
+                         interpret=True)
+        return jnp.sum(out.astype(jnp.float32) * w)
+
+    def r_loss(t):
+        out = merge_lib.merge_stacked(t, strategy, live_mask=live)
+        return jnp.sum(out.astype(jnp.float32) * w)
+
+    gk, gr = jax.grad(k_loss)(x), jax.grad(r_loss)(x)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(
+        gk.astype(jnp.float32), gr.astype(jnp.float32), rtol=tol, atol=tol
+    )
+
+
+@pytest.mark.parametrize("strategy", ["sum", "avg", "max", "mul"])
+def test_merge_pool_all_clients_dropped(strategy):
+    """live == 0 everywhere: forward hits the neutral-element edge case
+    (max specially zeroes) and every client's jacobian must be zero."""
+    from repro.core import merge as merge_lib
+
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, 16, 128))
+    live = jnp.zeros((4,))
+    w = jax.random.normal(jax.random.PRNGKey(6), (128,))
+
+    got = merge_pool(x, live, strategy=strategy, block_b=16, block_d=128,
+                     interpret=True)
+    want = ref.merge_pool(x, strategy, live)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+    gk = jax.grad(lambda t: jnp.sum(
+        merge_pool(t, live, strategy=strategy, block_b=16, block_d=128,
+                   interpret=True) * w))(x)
+    gr = jax.grad(lambda t: jnp.sum(
+        merge_lib.merge_stacked(t, strategy, live_mask=live) * w))(x)
+    np.testing.assert_allclose(gk, np.zeros_like(gk), atol=1e-6)
+    np.testing.assert_allclose(gk, gr, rtol=1e-6, atol=1e-6)
+
+
 def test_merge_pool_ragged_tiles():
     """B/D not multiples of the block size exercise tile padding."""
     x = jax.random.normal(jax.random.PRNGKey(0), (3, 37, 130))
@@ -67,18 +141,11 @@ def test_merge_pool_ragged_tiles():
 # flash attention
 # ---------------------------------------------------------------------------
 
-@settings(max_examples=8, deadline=None)
-@given(
-    b=st.integers(1, 2),
-    h=st.integers(1, 3),
-    s=st.sampled_from([128, 256]),
-    d=st.sampled_from([32, 64]),
-    causal=st.booleans(),
-    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
-    seed=st.integers(0, 99),
-)
-def test_flash_matches_ref(b, h, s, d, causal, dtype, seed):
-    qkv = jax.random.normal(jax.random.PRNGKey(seed), (3, b, h, s, d), dtype)
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,s,d", [(1, 2, 128, 32), (2, 3, 256, 64)])
+def test_flash_matches_ref(b, h, s, d, causal, dtype):
+    qkv = jax.random.normal(jax.random.PRNGKey(s + d), (3, b, h, s, d), dtype)
     got = flash_attention(*qkv, causal=causal, block_q=64, block_kv=64,
                           interpret=True)
     want = ref.flash_attention(*qkv, causal=causal)
@@ -86,6 +153,34 @@ def test_flash_matches_ref(b, h, s, d, causal, dtype, seed):
     np.testing.assert_allclose(
         got.astype(jnp.float32), want.astype(jnp.float32), rtol=tol, atol=tol
     )
+
+
+def test_flash_matches_ref_hypothesis_sweep():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        b=st.integers(1, 2),
+        h=st.integers(1, 3),
+        s=st.sampled_from([128, 256]),
+        d=st.sampled_from([32, 64]),
+        causal=st.booleans(),
+        dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+        seed=st.integers(0, 99),
+    )
+    def prop(b, h, s, d, causal, dtype, seed):
+        qkv = jax.random.normal(jax.random.PRNGKey(seed), (3, b, h, s, d), dtype)
+        got = flash_attention(*qkv, causal=causal, block_q=64, block_kv=64,
+                              interpret=True)
+        want = ref.flash_attention(*qkv, causal=causal)
+        tol = 3e-2 if dtype == jnp.bfloat16 else 5e-4
+        np.testing.assert_allclose(
+            got.astype(jnp.float32), want.astype(jnp.float32), rtol=tol,
+            atol=tol
+        )
+
+    prop()
 
 
 def test_flash_matches_model_chunked_path():
@@ -122,20 +217,36 @@ def _ssd_inputs(B, S, H, P, N, seed=0):
     return x, dt, A, Bm, Cm
 
 
-@settings(max_examples=6, deadline=None)
-@given(
-    s=st.sampled_from([64, 128]),
-    p=st.sampled_from([16, 32]),
-    n=st.sampled_from([16, 32]),
-    chunk=st.sampled_from([16, 32]),
-    seed=st.integers(0, 99),
-)
-def test_ssd_kernel_matches_chunked_model(s, p, n, chunk, seed):
-    x, dt, A, Bm, Cm = _ssd_inputs(2, s, 2, p, n, seed)
+@pytest.mark.parametrize("s,p,n,chunk", [(64, 16, 16, 16), (128, 32, 32, 32)])
+def test_ssd_kernel_matches_chunked_model(s, p, n, chunk):
+    x, dt, A, Bm, Cm = _ssd_inputs(2, s, 2, p, n, seed=s)
     want_y, want_st = mamba_lib.ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk)
     got_y, got_st = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
     np.testing.assert_allclose(got_y, want_y, rtol=3e-4, atol=3e-4)
     np.testing.assert_allclose(got_st, want_st, rtol=3e-4, atol=3e-4)
+
+
+def test_ssd_kernel_matches_chunked_model_hypothesis_sweep():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=6, deadline=None)
+    @given(
+        s=st.sampled_from([64, 128]),
+        p=st.sampled_from([16, 32]),
+        n=st.sampled_from([16, 32]),
+        chunk=st.sampled_from([16, 32]),
+        seed=st.integers(0, 99),
+    )
+    def prop(s, p, n, chunk, seed):
+        x, dt, A, Bm, Cm = _ssd_inputs(2, s, 2, p, n, seed)
+        want_y, want_st = mamba_lib.ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk)
+        got_y, got_st = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk,
+                                     interpret=True)
+        np.testing.assert_allclose(got_y, want_y, rtol=3e-4, atol=3e-4)
+        np.testing.assert_allclose(got_st, want_st, rtol=3e-4, atol=3e-4)
+
+    prop()
 
 
 def test_ssd_chunked_matches_sequential_recurrence():

@@ -1,34 +1,45 @@
-"""Vertical-partition invariants (hypothesis property tests)."""
+"""Vertical-partition invariants (parametrized core + hypothesis sweeps)."""
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import partition as part
 
+COVER_CASES = [(1, 1), (7, 3), (16, 2), (100, 7), (128, 8), (200, 5)]
 
-@settings(max_examples=30, deadline=None)
-@given(n=st.integers(1, 200), k=st.integers(1, 8))
+
+@pytest.mark.parametrize("n,k", COVER_CASES)
 def test_contiguous_partition_covers(n, k):
-    if k > n:
-        k = n
     slices = part.contiguous_partition(n, k)
     part.validate_partition(slices, n)
     assert len(slices) == k
 
 
-@settings(max_examples=30, deadline=None)
-@given(n=st.integers(1, 200), k=st.integers(1, 8))
+@pytest.mark.parametrize("n,k", COVER_CASES)
 def test_strided_partition_covers(n, k):
-    if k > n:
-        k = n
     part.validate_partition(part.strided_partition(n, k), n)
 
 
-@settings(max_examples=20, deadline=None)
-@given(n=st.integers(1, 128), k=st.integers(1, 6), seed=st.integers(0, 999))
+@pytest.mark.parametrize("n,k", COVER_CASES)
+@pytest.mark.parametrize("seed", [0, 123])
 def test_random_partition_covers(n, k, seed):
-    if k > n:
-        k = n
     part.validate_partition(part.random_partition(n, k, seed), n)
+
+
+def test_partition_covers_hypothesis_sweep():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=30, deadline=None)
+    @given(n=st.integers(1, 200), k=st.integers(1, 8), seed=st.integers(0, 999))
+    def prop(n, k, seed):
+        if k > n:
+            k = n
+        slices = part.contiguous_partition(n, k)
+        part.validate_partition(slices, n)
+        assert len(slices) == k
+        part.validate_partition(part.strided_partition(n, k), n)
+        part.validate_partition(part.random_partition(n, k, seed), n)
+
+    prop()
 
 
 def test_by_source_partition():

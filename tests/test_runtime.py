@@ -1,0 +1,201 @@
+"""Pipelined runtime: §3 identity at staleness 0, byte accounting against
+the analytic collective model, straggler no-wait behavior, and the
+simulated-clock win over the serial schedule."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.vertical_mlp import BANK_MARKETING, FINANCIAL_PHRASEBANK
+from repro.core import protocol, split_model, towers
+from repro.core.merge import collective_bytes_per_merge
+from repro.runtime import (
+    LinkModel,
+    default_deadline_s,
+    pipelined_step,
+    plan_step,
+    simulate_pipelined,
+    simulate_serial,
+)
+
+
+def _setup(cfg, seed=0, batch=16):
+    key = jax.random.PRNGKey(seed)
+    params = split_model.init_split_mlp(key, cfg)
+    ks = jax.random.split(key, 3)
+    x = jax.random.normal(ks[0], (batch, cfg.input_dim))
+    y = jax.random.randint(ks[1], (batch,), 0, cfg.num_classes)
+    slices = split_model.feature_slices(cfg)
+    feats = [x[:, jnp.asarray(s.indices)] for s in slices]
+
+    def loss_fn(logits, labels):
+        return split_model.softmax_xent(logits, labels, cfg.num_classes)
+
+    return params, feats, y, loss_fn
+
+
+def _assert_trees_close(a, b, atol=1e-5):
+    for la, lb in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(la, lb, atol=atol, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# §3 identity: pipelined @ staleness 0 == protocol_step == monolithic
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("microbatches", [1, 4])
+@pytest.mark.parametrize("merge", ["sum", "avg", "max", "concat", "mul"])
+def test_pipelined_staleness0_equals_protocol_step(merge, microbatches):
+    cfg = dataclasses.replace(BANK_MARKETING, merge=merge)
+    params, feats, y, loss_fn = _setup(cfg)
+
+    loss_s, tg_s, sg_s, _ = protocol.protocol_step(
+        towers.mlp_tower_apply, towers.mlp_tower_apply, loss_fn,
+        params["towers"], params["server"], feats, y, merge,
+    )
+    loss_p, tg_p, sg_p, _, report, _ = pipelined_step(
+        towers.mlp_tower_apply, towers.mlp_tower_apply, loss_fn,
+        params["towers"], params["server"], feats, y, merge,
+        microbatches=microbatches,
+        plan=plan_step(cfg, 16, microbatches),
+        link=LinkModel.uniform(cfg.num_clients),
+    )
+    np.testing.assert_allclose(loss_p, loss_s, atol=1e-5, rtol=1e-5)
+    _assert_trees_close((tg_p, sg_p), (tg_s, sg_s))
+    assert report.total_misses == 0  # staleness 0: nobody imputed
+
+    # ... and protocol_step itself == monolithic backprop (transitively the
+    # pipelined path reproduces end-to-end autodiff)
+    protocol.assert_equivalent_to_monolithic(
+        towers.mlp_tower_apply, towers.mlp_tower_apply, loss_fn,
+        params["towers"], params["server"], feats, y, merge,
+    )
+
+
+# ---------------------------------------------------------------------------
+# byte accounting: ledger vs the analytic collective model
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("merge", ["sum", "avg", "max", "concat", "mul"])
+def test_ledger_vs_collective_bytes(merge):
+    cfg = dataclasses.replace(BANK_MARKETING, merge=merge)
+    B, M = 16, 4
+    params, feats, y, loss_fn = _setup(cfg, batch=B)
+    plan = plan_step(cfg, B, M)
+
+    _, _, _, ledger, report, _ = pipelined_step(
+        towers.mlp_tower_apply, towers.mlp_tower_apply, loss_fn,
+        params["towers"], params["server"], feats, y, merge,
+        microbatches=M, plan=plan, link=LinkModel.uniform(cfg.num_clients),
+    )
+    # every client uplinks cut_dim floats per sample, M microbatches a step
+    per_client = [
+        ledger.bytes_with_tag(f"cut[{k}]") for k in range(cfg.num_clients)
+    ]
+    assert per_client == [B * cfg.cut_dim * 4] * cfg.num_clients
+    assert report.cut_bytes_per_client == per_client[0]
+
+    # the engine's analytic collective figure must agree with costs.py's
+    # model applied to the ledger-observed payload
+    payload_elements = per_client[0] // (4 * M)  # per microbatch
+    want = M * collective_bytes_per_merge(
+        merge, payload_elements, cfg.num_clients, 4
+    )
+    assert report.collective_bytes_per_client == want
+
+    # pipelined and serial schedules move identical bytes — same messages,
+    # different clock
+    _, _, _, serial_ledger = protocol.protocol_step(
+        towers.mlp_tower_apply, towers.mlp_tower_apply, loss_fn,
+        params["towers"], params["server"], feats, y, merge,
+    )
+    assert ledger.total() == serial_ledger.total()
+    assert ledger.sent_by("role0") == serial_ledger.sent_by("role0")
+
+
+# ---------------------------------------------------------------------------
+# clock: pipelining must beat the serial schedule
+# ---------------------------------------------------------------------------
+
+def test_pipelined_step_time_beats_serial_at_k4():
+    """The acceptance bar: >= 1.5x at K=4 under the same link cost model."""
+    cfg = dataclasses.replace(FINANCIAL_PHRASEBANK, merge="avg")
+    plan = plan_step(cfg, batch_size=256, microbatches=4)
+    link = LinkModel.uniform(cfg.num_clients)
+    serial = simulate_serial(plan, link)
+    pipe = simulate_pipelined(plan, link, mode="pipelined")
+    assert serial.step_time_s / pipe.step_time_s >= 1.5
+
+
+def test_nowait_bounds_straggler_step_time():
+    cfg = dataclasses.replace(FINANCIAL_PHRASEBANK, merge="avg")
+    plan = plan_step(cfg, batch_size=256, microbatches=4)
+    link = LinkModel.uniform(cfg.num_clients).with_straggler(2, slowdown=10.0)
+    wait = simulate_pipelined(plan, link, mode="pipelined")
+    nowait = simulate_pipelined(plan, link, mode="nowait")
+    assert nowait.misses_per_client[2] > 0  # the straggler gets imputed
+    assert sum(nowait.misses_per_client) == nowait.misses_per_client[2]
+    assert nowait.step_time_s < 0.5 * wait.step_time_s
+
+
+def test_deadline_default_is_fastest_path():
+    cfg = dataclasses.replace(BANK_MARKETING, merge="avg")
+    plan = plan_step(cfg, 16, 2)
+    link = LinkModel.uniform(cfg.num_clients)
+    d = default_deadline_s(plan, link)
+    assert d > 0
+    # uniform clients all arrive together: no misses even in nowait mode
+    rep = simulate_pipelined(plan, link, mode="nowait")
+    assert rep.total_misses == 0
+
+
+# ---------------------------------------------------------------------------
+# no-wait convergence smoke under heavy dropping
+# ---------------------------------------------------------------------------
+
+def test_nowait_convergence_smoke():
+    """With one client 20x degraded (missing every deadline), no-wait
+    training must still drive the loss down — the EMA imputation keeps the
+    merged representation sane while the stragglers sit out."""
+    cfg = dataclasses.replace(FINANCIAL_PHRASEBANK, merge="avg")
+    B, M, steps, lr = 32, 4, 40, 0.2
+    key = jax.random.PRNGKey(0)
+    params = split_model.init_split_mlp(key, cfg)
+    plan = plan_step(cfg, B, M)
+    link = LinkModel.uniform(cfg.num_clients).with_straggler(1, slowdown=20.0)
+
+    def loss_fn(logits, labels):
+        return split_model.softmax_xent(logits, labels, cfg.num_classes)
+
+    slices = split_model.feature_slices(cfg)
+    idx = [jnp.asarray(s.indices) for s in slices]
+    ema_state = None
+    losses = []
+    for step in range(steps):
+        ks = jax.random.split(jax.random.PRNGKey(step + 1), 2)
+        x = jax.random.normal(ks[0], (B, cfg.input_dim))
+        # learnable rule: label = sign of the first feature of client 0
+        y = (x[:, 0] > 0).astype(jnp.int32)
+        feats = [x[:, i] for i in idx]
+        loss, tg, sg, _, report, ema_state = pipelined_step(
+            towers.mlp_tower_apply, towers.mlp_tower_apply, loss_fn,
+            params["towers"], params["server"], feats, y, cfg.merge,
+            microbatches=M, mode="nowait", plan=plan, link=link,
+            ema_state=ema_state,
+        )
+        assert report.misses_per_client[1] == M  # straggler misses every mb
+        params = {
+            "towers": [
+                jax.tree_util.tree_map(lambda p, g: p - lr * g, tp, g)
+                for tp, g in zip(params["towers"], tg)
+            ],
+            "server": jax.tree_util.tree_map(
+                lambda p, g: p - lr * g, params["server"], sg
+            ),
+        }
+        losses.append(float(loss))
+    first = sum(losses[:5]) / 5
+    last = sum(losses[-5:]) / 5
+    assert last < first - 0.1, (first, last)

@@ -2,18 +2,31 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
 from repro.core import secure_agg
 
 
-@settings(max_examples=15, deadline=None)
-@given(k=st.integers(2, 6), d=st.integers(1, 64), seed=st.integers(0, 999))
+@pytest.mark.parametrize("k,d,seed", [(2, 1, 0), (3, 16, 5), (4, 64, 11), (6, 33, 77)])
 def test_masks_cancel_exactly(k, d, seed):
     payloads = jax.random.normal(jax.random.PRNGKey(seed), (k, d))
     agg, masked = secure_agg.secure_sum(payloads, base_seed=seed)
     # float32 pairwise masks cancel to ~ulp-level residue
     np.testing.assert_allclose(agg, payloads.sum(0), rtol=1e-4, atol=1e-4)
+
+
+def test_masks_cancel_hypothesis_sweep():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(k=st.integers(2, 6), d=st.integers(1, 64), seed=st.integers(0, 999))
+    def prop(k, d, seed):
+        payloads = jax.random.normal(jax.random.PRNGKey(seed), (k, d))
+        agg, _ = secure_agg.secure_sum(payloads, base_seed=seed)
+        np.testing.assert_allclose(agg, payloads.sum(0), rtol=1e-4, atol=1e-4)
+
+    prop()
 
 
 def test_server_view_is_masked():

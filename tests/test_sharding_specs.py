@@ -105,7 +105,12 @@ MULTI_DEVICE_SCRIPT = textwrap.dedent("""
     import jax, jax.numpy as jnp
     import numpy as np
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+    try:  # jax >= 0.6: top-level export, replication check renamed
+        from jax import shard_map
+        _sm_kw = {"check_vma": False}
+    except ImportError:
+        from jax.experimental.shard_map import shard_map
+        _sm_kw = {"check_rep": False}
     from repro.core import merge as merge_lib
 
     mesh = jax.make_mesh((2, 4), ("data", "client"))
@@ -123,7 +128,7 @@ MULTI_DEVICE_SCRIPT = textwrap.dedent("""
         f = shard_map(local_fn, mesh=mesh,
                       in_specs=P("client", "data", None),
                       out_specs=P(None, "data", None),
-                      check_vma=False)
+                      **_sm_kw)
         got = f(x)[0]
         want = merge_lib.merge_stacked(x, strategy)
         np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
