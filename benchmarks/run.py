@@ -92,6 +92,67 @@ def bench_runtime(out: dict) -> None:
     out["runtime"] = rows
 
 
+def bench_transport(out: dict) -> None:
+    """REAL execution (not the simulated clock): one protocol step through
+    the Executor over the inline SimTransport vs threaded InprocTransport,
+    K in {2, 4}, M=4 microbatches.  Measures the schedule-execution
+    machinery itself — tower forwards overlapping the role-0 merge/backward
+    on worker threads vs strictly inline."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.vertical_mlp import MLPSplitConfig
+    from repro.core import split_model, towers
+    from repro.runtime.executor import Executor
+    from repro.transport import InprocTransport, SimTransport, TowerWorker
+
+    rows = []
+    for K in (2, 4):
+        cfg = MLPSplitConfig(
+            name=f"transport_bench_k{K}", input_dim=64 * K, num_classes=2,
+            num_clients=K, client_feature_sizes=(64,) * K,
+            tower_hidden=(256,), cut_dim=128, server_hidden=(256,),
+            merge="avg",
+        )
+        params = split_model.init_split_mlp(jax.random.PRNGKey(0), cfg)
+        ks = jax.random.split(jax.random.PRNGKey(1), 2)
+        B = 256
+        x = jax.random.normal(ks[0], (B, cfg.input_dim))
+        y = jax.random.randint(ks[1], (B,), 0, cfg.num_classes)
+        slices = split_model.feature_slices(cfg)
+        feats = [x[:, jnp.asarray(s.indices)] for s in slices]
+
+        def loss_fn(logits, labels):
+            return split_model.softmax_xent(logits, labels, cfg.num_classes)
+
+        for name, make in (("sim", SimTransport), ("inproc", InprocTransport)):
+            workers = [
+                TowerWorker(k, towers.mlp_tower_apply, params["towers"][k])
+                for k in range(K)
+            ]
+            tr = make(workers)
+            try:
+                executor = Executor(tr, towers.mlp_tower_apply, loss_fn,
+                                    cfg.merge, mode="pipelined",
+                                    microbatches=4)
+                executor.run_step(params["server"], y, features=feats)  # warm
+                t0 = time.time()
+                reps = 5
+                for step in range(1, reps + 1):
+                    res = executor.run_step(params["server"], y, step=step,
+                                            features=feats,
+                                            collect_grads=False)
+                dt = (time.time() - t0) / reps
+            finally:
+                tr.close()
+            rows.append({
+                "clients": K, "transport": name, "step_time_ms": dt * 1e3,
+                "cut_bytes_per_client": res.report.cut_bytes_per_client,
+            })
+            _emit(f"transport/{name}_k{K}", dt * 1e6, "M=4 real execution")
+    out["transport"] = rows
+
+
 def run_paper_tables(steps: int, out: dict) -> None:
     from benchmarks import paper_tables as pt
 
@@ -127,6 +188,7 @@ def main(argv=None) -> int:
     out: dict = {}
     bench_kernels()
     bench_runtime(out)
+    bench_transport(out)
     steps = 400 if args.full else 60
     run_paper_tables(steps, out)
     if args.figures:
@@ -148,7 +210,8 @@ def main(argv=None) -> int:
         print("\n== roofline (from the dry-run matrix) ==")
         print(to_markdown(rows))
 
-    for name in ("runtime", "table2", "table3", "table4", "table5", "table6"):
+    for name in ("runtime", "transport", "table2", "table3", "table4",
+                 "table5", "table6"):
         if name in out:
             print(f"\n== {name} ==")
             for row in out[name]:

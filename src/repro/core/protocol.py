@@ -130,46 +130,30 @@ def protocol_step(
     The message schedule follows paper §4.4: feature-holders send cut
     activations to role 0; role 0 sends the head output to role 3; role 3
     returns the head jacobian; role 0 returns per-client cut jacobians.
+
+    Thin wrapper: the numerics live in
+    :class:`repro.runtime.executor.Executor` (serial mode, one microbatch,
+    neutral-element drop semantics) driven over the inline
+    :class:`~repro.transport.SimTransport` — the same execution path that
+    runs the pipelined schedule and the real inproc/multiproc transports.
     """
+    # function-level imports: runtime/transport import this module for the
+    # schedule and Ledger definitions
+    from repro.runtime.executor import Executor
+    from repro.transport.base import SimTransport, TowerWorker
+
     K = len(tower_params)
-    ledger = ledger if ledger is not None else Ledger()
-    schedule = step_schedule(K, label_holder)
-
-    # --- clients forward: role 1/3 -> role 0 -------------------------------
-    cuts = []
-    for spec in schedule.cuts:
-        cut_k = tower_fwd(tower_params[spec.client], features[spec.client])
-        ledger.record_spec(spec, cut_k)
-        cuts.append(cut_k)
-    stacked = jnp.stack(cuts)
-
-    # --- server forward + loss exchange: role 0 <-> role 3 ------------------
-    def server_loss(server_p, stacked_cuts):
-        merged = merge_lib.merge_stacked(stacked_cuts, merge, live_mask=live_mask)
-        logits = server_fwd(server_p, merged)
-        return loss_fn(logits, labels), logits
-
-    (loss, logits), (server_grads, cut_grads) = jax.value_and_grad(
-        server_loss, argnums=(0, 1), has_aux=True
-    )(server_params, stacked)
-    ledger.record_spec(schedule.head_out, logits)
-    ledger.record_spec(schedule.head_jac, logits)
-
-    # --- jacobian splitting: role 0 -> each client --------------------------
-    tower_grads = []
-    for spec in schedule.jacs:
-        k = spec.client
-        ledger.record_spec(spec, cut_grads[k])
-
-        def tower_obj(tp, k=k):
-            return jnp.vdot(
-                tower_fwd(tp, features[k]).astype(jnp.float32),
-                cut_grads[k].astype(jnp.float32),
-            )
-
-        tower_grads.append(jax.grad(tower_obj)(tower_params[k]))
-
-    return loss, tower_grads, server_grads, ledger
+    workers = [TowerWorker(k, tower_fwd, tower_params[k]) for k in range(K)]
+    executor = Executor(
+        SimTransport(workers), server_fwd, loss_fn, merge,
+        mode="serial", microbatches=1, label_holder=label_holder,
+        drop_policy="neutral",
+    )
+    res = executor.run_step(
+        server_params, labels, features=list(features),
+        merge_mask=live_mask, ledger=ledger, collect_grads=True,
+    )
+    return res.loss, res.tower_grads, res.server_grads, res.ledger
 
 
 def assert_equivalent_to_monolithic(

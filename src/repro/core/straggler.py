@@ -30,7 +30,7 @@ def init_ema_state(cfg: MLPSplitConfig, dtype=jnp.float32):
 
 
 def impute_stack(
-    cuts: jnp.ndarray,  # (K, B, cut_dim) — dropped rows are garbage/zero
+    cuts: jnp.ndarray,  # (K, ..., cut_dim) — dropped rows are garbage/zero
     live_mask: jnp.ndarray,  # (K,)
     ema_state: dict,
     *,
@@ -44,10 +44,15 @@ def impute_stack(
     Live clients update the EMA; dropped clients are REPLACED by their EMA
     (broadcast over the batch) so the merge then sees every seat filled —
     no neutral-element distortion.
+
+    ``cuts`` may carry any middle dims — (K, B, D) for the paper MLP,
+    (K, B, S, D) for transformer towers: the EMA is a (K, D) vector
+    averaged over every non-feature axis, so LM-scale no-wait training
+    shares the exact state/bookkeeping the MLP path validates.
     """
-    K, B, D = cuts.shape
-    lv = live_mask.reshape(K, 1, 1)
-    batch_mean = jnp.mean(cuts, axis=1)  # (K, D)
+    K, D = cuts.shape[0], cuts.shape[-1]
+    lv = live_mask.reshape((K,) + (1,) * (cuts.ndim - 1))
+    batch_mean = jnp.mean(cuts.reshape(K, -1, D), axis=1)  # (K, D)
 
     init = ema_state["initialized"].reshape(K, 1)
     new_ema = jnp.where(
@@ -58,9 +63,10 @@ def impute_stack(
     )
     new_init = jnp.maximum(ema_state["initialized"], live_mask)
 
-    imputed = jnp.where(
-        lv > 0, cuts, jnp.broadcast_to(new_ema[:, None, :], cuts.shape)
+    ema_full = jnp.broadcast_to(
+        new_ema.reshape((K,) + (1,) * (cuts.ndim - 2) + (D,)), cuts.shape
     )
+    imputed = jnp.where(lv > 0, cuts, ema_full)
     return imputed, {"ema": new_ema, "initialized": new_init}
 
 

@@ -9,6 +9,11 @@ write of the merged tile.
 TPU adaptation notes (DESIGN.md §6): tiles are (block_b, block_d) with
 block_d a multiple of 128 (lane width) so the VPU reduction over K is fully
 vectorized; K is small (2-8 clients, paper §4) and is unrolled.
+
+``concat`` (the last merge off the fast path, ROADMAP) is a gather, not a
+reduction: a third grid axis walks the K clients and DMAs each (bB, bD)
+tile straight into its column block of the (B, K*D) output — one read of
+the stack, one contiguous write, live-masking fused in.
 """
 from __future__ import annotations
 
@@ -51,8 +56,75 @@ def _merge_kernel(stacked_ref, live_ref, out_ref, *, strategy: str, k: int):
     out_ref[...] = acc.astype(out_ref.dtype)
 
 
+def _concat_block_d(block_d: int, d: int) -> int:
+    """concat tiles must align with the per-client D boundaries in the
+    (B, K*D) output grid, so the tile width has to divide D; fall back to a
+    whole client row when it doesn't (cut widths are modest)."""
+    bd = min(block_d, d)
+    return bd if d % bd == 0 else d
+
+
+def _concat_kernel(stacked_ref, live_ref, out_ref):
+    """Fused gather-concat: client k's (bB, bD) tile lands at column block
+    k*D + j*bD of the (B, K*D) output; dropped clients write zeros.  One
+    HBM read of the stack, one contiguous write — no intermediate
+    per-client copies like the jnp concatenate lowering."""
+    k = pl.program_id(2)
+    l = live_ref[k]
+    out_ref[...] = (stacked_ref[0].astype(jnp.float32) * l).astype(
+        out_ref.dtype)
+
+
+def _concat_fwd_call(stacked, live, *, block_b, block_d, interpret):
+    K, B, D = stacked.shape
+    bb, bd = min(block_b, B), _concat_block_d(block_d, D)
+    n_d = D // bd
+    grid = (pl.cdiv(B, bb), n_d, K)
+    return pl.pallas_call(
+        _concat_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bb, bd), lambda i, j, k: (k, i, j)),
+            pl.BlockSpec((K,), lambda i, j, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bb, bd), lambda i, j, k: (i, k * n_d + j)),
+        out_shape=jax.ShapeDtypeStruct((B, K * D), stacked.dtype),
+        interpret=interpret,
+    )(stacked, live)
+
+
+def _concat_bwd_kernel(live_ref, g_ref, dx_ref):
+    """Jacobian splitting for concat: client k's gradient is its own column
+    slice of the merged gradient (zeroed when it was dropped)."""
+    k = pl.program_id(2)
+    dx_ref[0] = (g_ref[...].astype(jnp.float32) * live_ref[k]).astype(
+        dx_ref.dtype)
+
+
+def _concat_bwd_call(live, g, *, k, block_b, block_d, interpret):
+    B = g.shape[0]
+    D = g.shape[1] // k
+    bb, bd = min(block_b, B), _concat_block_d(block_d, D)
+    n_d = D // bd
+    grid = (pl.cdiv(B, bb), n_d, k)
+    return pl.pallas_call(
+        _concat_bwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k,), lambda i, j, kk: (0,)),
+            pl.BlockSpec((bb, bd), lambda i, j, kk: (i, kk * n_d + j)),
+        ],
+        out_specs=pl.BlockSpec((1, bb, bd), lambda i, j, kk: (kk, i, j)),
+        out_shape=jax.ShapeDtypeStruct((k, B, D), g.dtype),
+        interpret=interpret,
+    )(live, g)
+
+
 def _merge_pool_fwd_call(stacked, live, *, strategy, block_b, block_d,
                          interpret):
+    if strategy == "concat":
+        return _concat_fwd_call(stacked, live, block_b=block_b,
+                                block_d=block_d, interpret=interpret)
     K, B, D = stacked.shape
     bb, bd = min(block_b, B), min(block_d, D)
     grid = (pl.cdiv(B, bb), pl.cdiv(D, bd))
@@ -142,9 +214,14 @@ def _fwd(stacked, live, strategy, block_b, block_d, interpret):
 
 def _bwd(strategy, block_b, block_d, interpret, res, g):
     stacked, live, out = res
-    dx = _merge_pool_bwd_call(stacked, live, out, g.astype(stacked.dtype),
-                              strategy=strategy, block_b=block_b,
+    if strategy == "concat":
+        dx = _concat_bwd_call(live, g.astype(stacked.dtype),
+                              k=stacked.shape[0], block_b=block_b,
                               block_d=block_d, interpret=interpret)
+    else:
+        dx = _merge_pool_bwd_call(stacked, live, out, g.astype(stacked.dtype),
+                                  strategy=strategy, block_b=block_b,
+                                  block_d=block_d, interpret=interpret)
     return dx, None  # live mask is non-differentiable
 
 
@@ -155,10 +232,12 @@ _merge_pool_diff.defvjp(_fwd, _bwd)
                                              "interpret"))
 def merge_pool(stacked, live=None, *, strategy: str = "avg",
                block_b: int = 128, block_d: int = 512, interpret: bool = False):
-    """stacked: (K, B, D); live: (K,) float mask (None = all live) -> (B, D).
+    """stacked: (K, B, D); live: (K,) float mask (None = all live).
 
-    Differentiable: the backward pass is a second fused Pallas kernel
-    implementing the paper's jacobian splitting (§3)."""
+    Result (B, D) for the reductions, (B, K*D) for the fused gather-concat
+    (dropped clients contribute zero columns).  Differentiable: the backward
+    pass is a second fused Pallas kernel implementing the paper's jacobian
+    splitting (§3) — column-slice routing for concat."""
     K, B, D = stacked.shape
     if live is None:
         live = jnp.ones((K,), jnp.float32)

@@ -20,9 +20,9 @@ from repro.core import merge as merge_lib
 
 def merge_pool(stacked: jnp.ndarray, strategy: str,
                live: Optional[jnp.ndarray] = None) -> jnp.ndarray:
-    """stacked: (K, B, D) -> (B, D).  concat is excluded (it is a layout op,
-    not a reduction — no fusion win)."""
-    assert strategy in ("sum", "avg", "max", "mul")
+    """stacked: (K, B, D) -> (B, D) for the reductions, (B, K*D) for the
+    fused gather-concat (one HBM read of the stack, one contiguous write)."""
+    assert strategy in ("sum", "avg", "max", "mul", "concat")
     return merge_lib.merge_stacked(stacked, strategy, live_mask=live)
 
 

@@ -21,6 +21,19 @@ Examples:
   # bounded-staleness no-wait mode with a 10x straggler on client 1:
   PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \\
       --steps 20 --runtime nowait --microbatches 4 --straggler 1
+
+  # SPLIT EXECUTION over real per-role processes: spawn one OS process per
+  # feature holder (each owns only its tower + embedding slice and its own
+  # token stream), train through the Executor over TCP loopback sockets,
+  # and verify step-0 gradients against the serial protocol_step:
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \\
+      --steps 5 --transport multiproc
+
+  # same, threads instead of processes, pipelined with adaptive no-wait
+  # deadlines and a wall-clock straggler on client 1:
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \\
+      --steps 20 --transport inproc --runtime nowait --microbatches 4 \\
+      --straggler 1
 """
 from __future__ import annotations
 
@@ -52,10 +65,16 @@ def scale_config(cfg, scale: str):
     if scale not in presets:
         raise SystemExit(f"unknown --scale {scale}")
     fields = dict(presets[scale])
-    if cfg.family in ("ssm", "hybrid"):
-        fields.pop("num_heads", None)
-        fields.pop("num_kv_heads", None)
-        fields.pop("d_ff", None) if cfg.family == "ssm" else None
+    if cfg.family == "ssm":
+        # pure Mamba: no attention heads, and the FFN lives inside the SSD
+        # block so the preset d_ff is meaningless too
+        for f in ("num_heads", "num_kv_heads", "d_ff"):
+            fields.pop(f)
+    elif cfg.family == "hybrid":
+        # zamba2-style: the shared attention block derives its head layout
+        # from the arch config, but its FFN width IS the preset d_ff
+        for f in ("num_heads", "num_kv_heads"):
+            fields.pop(f)
     return dataclasses.replace(cfg, **fields)
 
 
@@ -115,7 +134,15 @@ def main(argv=None):
     ap.add_argument("--microbatches", type=int, default=4,
                     help="pipeline depth for --runtime pipelined/nowait")
     ap.add_argument("--straggler", type=int, default=None,
-                    help="degrade this client 10x in the runtime simulation")
+                    help="degrade this client 10x in the runtime simulation "
+                         "(real wall-clock delay under --transport "
+                         "inproc/multiproc)")
+    ap.add_argument("--transport", default="sim",
+                    choices=["sim", "inproc", "multiproc"],
+                    help="sim: monolithic jitted step + simulated federation "
+                         "clock; inproc/multiproc: SPLIT EXECUTION through "
+                         "the Executor over per-role threads/processes "
+                         "(repro.transport)")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -134,11 +161,24 @@ def main(argv=None):
         cfg = cfg.with_vertical(v)
 
     if cfg.vertical is None and (args.runtime != "serial"
-                                 or args.straggler is not None):
+                                 or args.straggler is not None
+                                 or args.transport != "sim"):
         raise SystemExit(
-            f"--runtime {args.runtime}/--straggler need a vertical config; "
-            "this run is centralized (--vertical off or arch without one)"
+            f"--runtime {args.runtime}/--straggler/--transport need a "
+            "vertical config; this run is centralized (--vertical off or "
+            "arch without one)"
         )
+    if args.transport != "sim":
+        from repro.models.backbone import SPLIT_EXEC_FAMILIES
+
+        if cfg.family not in SPLIT_EXEC_FAMILIES:
+            raise SystemExit(
+                f"--transport {args.transport} (split execution) covers "
+                f"families {SPLIT_EXEC_FAMILIES}; {cfg.name} is "
+                f"{cfg.family!r}")
+        if args.checkpoint:
+            raise SystemExit("--checkpoint is not supported with split "
+                             "execution (tower params live at the clients)")
     if cfg.vertical is not None:
         # fail fast — the runtime report renders after training finishes
         if args.microbatches < 1:
@@ -161,6 +201,32 @@ def main(argv=None):
     print(f"arch={cfg.name} family={cfg.family} params={n_params/1e6:.1f}M "
           f"vertical={cfg.vertical}")
     loader = LMBatchLoader(cfg, args.batch, args.seq, seed=args.seed)
+    if args.transport != "sim":
+        from repro.train.loop import train_split
+
+        _, metrics, report = train_split(
+            cfg, loader, steps=args.steps, batch=args.batch, seq=args.seq,
+            transport=args.transport, runtime=args.runtime,
+            microbatches=args.microbatches, learning_rate=args.lr,
+            seed=args.seed, straggler=args.straggler,
+        )
+        summary = metrics.summary()
+        summary.update(arch=cfg.name, params=n_params, steps=args.steps,
+                       vertical=args.vertical, transport=args.transport)
+        if report is not None:
+            summary["runtime"] = {
+                "mode": report.mode,
+                "transport": args.transport,
+                "step_time_s": report.step_time_s,
+                "deadline_misses": report.total_misses,
+                "cut_bytes_per_client": report.cut_bytes_per_client,
+            }
+        print(json.dumps(summary, indent=1))
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump({"summary": summary, "losses": metrics.losses}, f)
+        return 0
+
     params, metrics = train(
         cfg, loader, steps=args.steps, learning_rate=args.lr,
         checkpoint_path=args.checkpoint, seed=args.seed,

@@ -329,6 +329,18 @@ def forward(params, batch, cfg: ArchConfig, *, live_mask=None, window=None,
         x = _towers_forward(params, x, cfg, positions=positions,
                             live_mask=live_mask, remat=remat)
 
+    x, aux = _server_trunk_apply(params, x, cfg, dims, positions=positions,
+                                 window=window, remat=remat)
+    x = tfm._norm(params["final_norm"], x, dims.norm, dims.norm_eps)
+    return layers.unembed(params["embed"], x), aux
+
+
+def _server_trunk_apply(params, x, cfg: ArchConfig, dims: BlockDims, *,
+                        positions, window=None, remat=False):
+    """Post-merge server layers for the token-LM families; returns (x, aux).
+    Shared by the monolithic ``forward`` and the split-execution
+    ``server_fwd`` so the two paths can never diverge."""
+    aux = jnp.zeros((), jnp.float32)
     if cfg.family == "dense":
         x = tfm.dense_stack_apply(params["server"], x, dims, causal=True,
                                   positions=positions, window=window,
@@ -353,9 +365,7 @@ def forward(params, batch, cfg: ArchConfig, *, live_mask=None, window=None,
         )
     else:
         raise ValueError(cfg.family)
-
-    x = tfm._norm(params["final_norm"], x, dims.norm, dims.norm_eps)
-    return layers.unembed(params["embed"], x), aux
+    return x, aux
 
 
 def encode_audio(params, frames, cfg: ArchConfig, *, live_mask=None,
@@ -775,6 +785,93 @@ def make_serve_step(cfg: ArchConfig, *, window=None, ring=False,
                            chunk_sharding=chunk_sharding)
 
     return serve
+
+
+# ---------------------------------------------------------------------------
+# split execution: per-role params + pure tower/server callables
+# ---------------------------------------------------------------------------
+
+SPLIT_EXEC_FAMILIES = ("dense", "ssm", "hybrid")
+
+
+def _check_split_exec(cfg: ArchConfig) -> None:
+    if cfg.vertical is None:
+        raise ValueError(f"{cfg.name}: split execution needs a vertical config")
+    if cfg.family not in SPLIT_EXEC_FAMILIES:
+        raise NotImplementedError(
+            f"split execution covers the token-LM families "
+            f"{SPLIT_EXEC_FAMILIES}; {cfg.name} is {cfg.family!r} "
+            "(moe carries a router aux loss outside the protocol's "
+            "loss exchange; audio/vlm towers are modality-shaped)")
+
+
+def split_lm_params(cfg: ArchConfig, params) -> tuple[list, dict]:
+    """Partition a monolithic ``init_params`` tree into per-role trees.
+
+    Client k gets its tower stack PLUS its vertical slice of the embedding
+    table — columns [k*d/K, (k+1)*d/K) are all it needs to embed its own
+    token stream, the true by-feature partition of the input layer.  The
+    role-0 server keeps everything else (server trunk, final norm, and the
+    full table for the unembed head; in split execution the input-embedding
+    columns train at the clients while the head trains at the server).
+    """
+    _check_split_exec(cfg)
+    K = cfg.vertical.num_clients
+    ds = cfg.d_model // K
+    table = params["embed"]["table"]
+    towers = []
+    for k in range(K):
+        tp = dict(jax.tree_util.tree_map(lambda a: a[k], params["towers"]))
+        tp["embed_slice"] = table[:, k * ds:(k + 1) * ds]
+        towers.append(tp)
+    server = {key: val for key, val in params.items() if key != "towers"}
+    return towers, server
+
+
+def make_split_lm_fns(cfg: ArchConfig):
+    """(tower_fwd, server_fwd, loss_fn) pure callables for the Executor.
+
+    The protocol "features" are the raw token ids (every client holds the
+    shared stream; its PRIVATE dimension is the embedding-table slice), so
+    ``protocol_step(tower_fwd, server_fwd, loss_fn, towers, server,
+    [tokens]*K, labels, merge)`` is the serial reference the transports
+    must match — asserted at step 0 of ``train.loop.train_split`` and in
+    tests/test_transport.py.
+    """
+    _check_split_exec(cfg)
+    v = cfg.vertical
+    dims = BlockDims.from_arch(cfg)
+    if cfg.family in ("ssm", "hybrid"):
+        dims_t = None
+    else:
+        dims_t = _tower_dims(cfg)
+
+    def tower_fwd(tp, tokens):
+        x = jnp.take(tp["embed_slice"], tokens, axis=0)  # (B, S, d/K)
+        positions = jnp.arange(tokens.shape[-1], dtype=jnp.int32)
+        h = x @ tp["proj_in"]
+        if cfg.family in ("ssm", "hybrid"):
+            h = tfm.mamba_stack_apply(tp["blocks"], h, cfg.ssm,
+                                      tp["proj_in"].shape[1], cfg.norm_eps)
+        else:
+            h = tfm.dense_stack_apply(tp["blocks"], h, dims_t, causal=True,
+                                      positions=positions)
+        cut = h @ tp["proj_out"]
+        if v.compression is not None:
+            cut = comp_lib.apply_compression(
+                cut[None], v.compression, v.topk_fraction)[0]
+        return cut
+
+    def server_fwd(sp, merged):
+        positions = jnp.arange(merged.shape[1], dtype=jnp.int32)
+        x, _ = _server_trunk_apply(sp, merged, cfg, dims, positions=positions)
+        x = tfm._norm(sp["final_norm"], x, dims.norm, dims.norm_eps)
+        return layers.unembed(sp["embed"], x)
+
+    def loss_fn(logits, labels):
+        return lm_loss(logits, labels)
+
+    return tower_fwd, server_fwd, loss_fn
 
 
 # ---------------------------------------------------------------------------

@@ -19,13 +19,18 @@ Three runtimes (``--runtime`` on repro.launch.train):
   deadline is imputed from its EMA (repro.core.straggler) and skips that
   microbatch's jacobian; a straggler can never stall the step.
 
-Layout: ``links`` (per-link latency/bandwidth + compute rates),
-``clock`` (event heap + FIFO resources), ``engine`` (StepPlan,
-simulate_serial / simulate_pipelined, and the pipelined_step numerics).
-Benchmarks: ``python -m benchmarks.run`` has a runtime section sweeping
-serial vs pipelined vs no-wait at K in {2, 4, 8}.
+Layout: ``links`` (per-link latency/bandwidth + compute rates), ``clock``
+(event heap + FIFO resources), ``engine`` (StepPlan, simulate_serial /
+simulate_pipelined, pipelined_step wrapper), ``deadline`` (adaptive
+no-wait windows from per-client arrival EWMAs), ``executor`` (the Executor
+— the ONE execution path that moves real payloads over any
+``repro.transport`` backend; ``protocol_step`` and ``pipelined_step`` are
+thin wrappers over it).  Benchmarks: ``python -m benchmarks.run`` has a
+runtime section sweeping serial vs pipelined vs no-wait at K in {2, 4, 8}
+and a transport section timing real execution over threads.
 """
 from repro.runtime.clock import EventClock, Resource
+from repro.runtime.deadline import AdaptiveDeadline
 from repro.runtime.engine import (
     MODES,
     SimReport,
@@ -37,16 +42,27 @@ from repro.runtime.engine import (
     simulate_pipelined,
     simulate_serial,
 )
+from repro.runtime.executor import (
+    ExecReport,
+    ExecutionResult,
+    Executor,
+    fast_merge,
+)
 from repro.runtime.links import LinkModel
 
 __all__ = [
+    "AdaptiveDeadline",
     "EventClock",
+    "ExecReport",
+    "ExecutionResult",
+    "Executor",
     "Resource",
     "LinkModel",
     "MODES",
     "SimReport",
     "StepPlan",
     "default_deadline_s",
+    "fast_merge",
     "pipelined_step",
     "plan_from_arch",
     "plan_step",

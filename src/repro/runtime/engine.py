@@ -27,19 +27,17 @@ The message schedule is THE schedule from repro.core.protocol
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.vertical_mlp import MLPSplitConfig
-from repro.core import merge as merge_lib
-from repro.core import straggler as straggler_lib
 from repro.core.costs import mlp_forward_flops
 from repro.core.merge import collective_bytes_per_merge, merged_dim
-from repro.core.protocol import Ledger, step_schedule
+from repro.core.protocol import Ledger
 from repro.runtime.clock import EventClock, Resource
+from repro.runtime.deadline import AdaptiveDeadline
 from repro.runtime.links import LinkModel
 
 MODES = ("serial", "pipelined", "nowait")
@@ -213,14 +211,23 @@ def simulate_pipelined(
     *,
     mode: str = "pipelined",
     deadline_s: Optional[float] = None,
+    deadline: Optional[AdaptiveDeadline] = None,
 ) -> SimReport:
-    """Event-driven makespan of the overlapped schedule; see module doc."""
+    """Event-driven makespan of the overlapped schedule; see module doc.
+
+    No-wait deadlines: an explicit ``deadline_s`` is a static per-microbatch
+    window (the pre-adaptive behavior); otherwise an
+    :class:`~repro.runtime.deadline.AdaptiveDeadline` — seeded with
+    ``default_deadline_s`` and fed every arrival's spread behind its
+    microbatch's first cut — tightens/loosens the window online.
+    """
     if mode not in ("pipelined", "nowait"):
         raise ValueError(f"mode must be pipelined|nowait, got {mode!r}")
     if link.num_clients != plan.num_clients:
         raise ValueError("link model and plan disagree on K")
-    if mode == "nowait" and deadline_s is None:
-        deadline_s = default_deadline_s(plan, link)
+    if mode == "nowait" and deadline_s is None and deadline is None:
+        deadline = AdaptiveDeadline(
+            plan.num_clients, initial_s=default_deadline_s(plan, link))
 
     M, K = plan.microbatches, plan.num_clients
     clock = EventClock()
@@ -230,6 +237,7 @@ def simulate_pipelined(
     server = Resource("server")
 
     arrived: list[dict[int, float]] = [{} for _ in range(M)]
+    first_arrival: dict[int, float] = {}
     started = [False] * M
     report = _report_skeleton(plan, mode)
     done_t = [0.0]
@@ -249,13 +257,20 @@ def simulate_pipelined(
         clock.post(end, lambda: arrive_cut(k, m))
 
     def arrive_cut(k: int, m: int) -> None:
+        if m not in first_arrival:
+            first_arrival[m] = clock.now
+        if deadline is not None:
+            # late arrivals observe too, so a recovered straggler can earn
+            # its way back under the (loosening) deadline
+            deadline.observe(k, clock.now - first_arrival[m])
         if started[m]:  # missed the no-wait deadline: discarded at role 0
             return
         arrived[m][k] = clock.now
         if len(arrived[m]) == K:
             start_server(m)
         elif mode == "nowait" and len(arrived[m]) == 1:
-            clock.post_in(deadline_s, lambda: hit_deadline(m))
+            window = deadline_s if deadline is None else deadline.deadline_s()
+            clock.post_in(window, lambda: hit_deadline(m))
 
     def hit_deadline(m: int) -> None:
         if not started[m]:
@@ -316,25 +331,9 @@ def simulate_pipelined(
 
 
 # ---------------------------------------------------------------------------
-# numerics: the pipelined/no-wait protocol step
+# numerics: the pipelined/no-wait protocol step (thin wrapper — the
+# execution path lives in repro.runtime.executor)
 # ---------------------------------------------------------------------------
-
-def _fast_merge(stacked: jnp.ndarray, strategy: str) -> jnp.ndarray:
-    """merge_pool fast path for the reduction merges (ops.py dispatches the
-    fused Pallas kernel on TPU, the jnp oracle elsewhere); concat is a
-    layout op and stays on merge_stacked."""
-    if strategy == "concat":
-        return merge_lib.merge_stacked(stacked, strategy)
-    from repro.kernels import ops
-
-    return ops.merge_pool(stacked, strategy=strategy)
-
-
-def _tree_mean(trees):
-    return jax.tree_util.tree_map(
-        lambda *leaves: sum(leaves) / len(leaves), *trees
-    )
-
 
 def pipelined_step(
     tower_fwd: Callable,
@@ -365,6 +364,12 @@ def pipelined_step(
     mean losses used here); ``mode="nowait"`` additionally needs ``link``
     (who misses a deadline is a property of the network) and an
     ``ema_state`` for imputation (one is created if absent).
+
+    Thin wrapper: the simulated clock (``simulate_pipelined``) decides who
+    made each merge; :class:`repro.runtime.executor.Executor` then executes
+    the schedule with that liveness over the inline
+    :class:`~repro.transport.SimTransport` — the same execution path the
+    real inproc/multiproc transports use.
     """
     if mode not in ("pipelined", "nowait"):
         raise ValueError(f"mode must be pipelined|nowait, got {mode!r}")
@@ -376,7 +381,6 @@ def pipelined_step(
     mb = B // M
 
     ledger = ledger if ledger is not None else Ledger()
-    schedule = step_schedule(K, label_holder)
     if plan is None:
         # timing-only default; callers with a real config should pass
         # plan_step(cfg, ...) so the FLOP model matches costs.py
@@ -399,68 +403,20 @@ def pipelined_step(
         link = LinkModel.uniform(K)
     report = simulate_pipelined(plan, link, mode=mode, deadline_s=deadline_s)
 
-    if mode == "nowait" and ema_state is None:
-        cut_dim = plan.cut_elements // mb
-        ema_state = {
-            "ema": jnp.zeros((K, cut_dim), jnp.float32),
-            "initialized": jnp.zeros((K,), jnp.float32),
-        }
+    from repro.runtime.executor import Executor
+    from repro.transport.base import SimTransport, TowerWorker
 
-    losses, tower_grad_acc, server_grad_acc = [], [], []
-    for m in range(M):
-        sl = slice(m * mb, (m + 1) * mb)
-        feats_m = [f[sl] for f in features]
-        labels_m = labels[sl]
-        live = jnp.asarray(report.live[m], jnp.float32)
-
-        cuts = []
-        for spec in schedule.cuts:
-            cut_k = tower_fwd(tower_params[spec.client], feats_m[spec.client])
-            ledger.record_spec(spec, cut_k)  # sent even if it arrives late
-            cuts.append(cut_k)
-        stacked = jnp.stack(cuts)
-
-        def server_loss(server_p, stacked_cuts):
-            if mode == "nowait":
-                imputed, new_ema = straggler_lib.impute_stack(
-                    stacked_cuts, live, ema_state, decay=ema_decay
-                )
-                merged = _fast_merge(imputed, merge)
-            else:
-                new_ema = ema_state
-                merged = _fast_merge(stacked_cuts, merge)
-            logits = server_fwd(server_p, merged)
-            return loss_fn(logits, labels_m), (logits, new_ema)
-
-        (loss_m, (logits, ema_state)), (sg, cut_grads) = jax.value_and_grad(
-            server_loss, argnums=(0, 1), has_aux=True
-        )(server_params, stacked)
-        ledger.record_spec(schedule.head_out, logits)
-        ledger.record_spec(schedule.head_jac, logits)
-
-        tg_m = []
-        for spec in schedule.jacs:
-            k = spec.client
-            if report.live[m][k] > 0:
-                ledger.record_spec(spec, cut_grads[k])
-
-                def tower_obj(tp, k=k):
-                    return jnp.vdot(
-                        tower_fwd(tp, feats_m[k]).astype(jnp.float32),
-                        cut_grads[k].astype(jnp.float32),
-                    )
-
-                tg_m.append(jax.grad(tower_obj)(tower_params[k]))
-            else:  # missed the deadline: no jacobian, no update this microbatch
-                tg_m.append(jax.tree_util.tree_map(
-                    jnp.zeros_like, tower_params[k]))
-        losses.append(loss_m)
-        tower_grad_acc.append(tg_m)
-        server_grad_acc.append(sg)
-
-    loss = sum(losses) / M
-    tower_grads = [
-        _tree_mean([tower_grad_acc[m][k] for m in range(M)]) for k in range(K)
-    ]
-    server_grads = _tree_mean(server_grad_acc)
-    return loss, tower_grads, server_grads, ledger, report, ema_state
+    workers = [TowerWorker(k, tower_fwd, tower_params[k]) for k in range(K)]
+    executor = Executor(
+        SimTransport(workers), server_fwd, loss_fn, merge,
+        mode=mode, microbatches=M, label_holder=label_holder,
+        drop_policy="impute" if mode == "nowait" else "fused",
+        ema_decay=ema_decay,
+    )
+    res = executor.run_step(
+        server_params, labels, features=list(features),
+        liveness=report.live, ema_state=ema_state, ledger=ledger,
+        collect_grads=True, report=report,
+    )
+    return (res.loss, res.tower_grads, res.server_grads, res.ledger,
+            res.report, res.ema_state)

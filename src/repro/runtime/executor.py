@@ -1,0 +1,354 @@
+"""Executor: drive the protocol schedule over any transport.
+
+This is the single execution path behind ``protocol_step`` (serial),
+``pipelined_step`` (microbatch pipelining / no-wait) and the split-executing
+train loop: one role-0 driver that walks ``step_schedule``, records every
+message in the shared :class:`~repro.core.protocol.Ledger`, merges cut
+activations (EMA-imputing no-wait misses), backprops the server network and
+returns per-client jacobians — over a :class:`~repro.transport.Transport`.
+
+Drop policies (what happens to a client absent from a microbatch's merge):
+
+* ``"neutral"`` — serial protocol semantics: the merge masks the client to
+  its strategy's neutral element (``merge_mask``); jacobians still flow to
+  every client.  ``protocol_step``'s ``live_mask``.
+* ``"fused"``   — staleness 0: everyone is live, the fused
+  ``kernels.merge_pool`` path merges the full stack.
+* ``"impute"``  — no-wait: missing seats are filled from the per-client
+  EMA (``repro.core.straggler``); only live clients get a jacobian.
+
+Liveness comes either from a predetermined matrix (the simulated federation
+clock of ``engine.simulate_pipelined`` — every payload still flows, the
+clock just decides who made the merge) or, over a real transport in
+``"nowait"`` mode, from wall-clock deadlines driven by the
+:class:`~repro.runtime.deadline.AdaptiveDeadline` arrival EWMAs.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import merge as merge_lib
+from repro.core import straggler as straggler_lib
+from repro.core.merge import collective_bytes_per_merge
+from repro.core.protocol import Ledger, step_schedule
+from repro.runtime.deadline import AdaptiveDeadline
+
+DROP_POLICIES = ("neutral", "fused", "impute")
+
+
+def fast_merge(stacked: jnp.ndarray, strategy: str) -> jnp.ndarray:
+    """merge_pool fast path for every strategy — the fused Pallas kernel on
+    TPU (reductions AND the gather-concat), the jnp oracle elsewhere.
+
+    The kernel is (K, B, D)-shaped; LM cut stacks arrive as (K, B, S, D),
+    so extra middle dims are flattened around the call and restored after
+    (rows are independent in every merge, so this is exact).
+    """
+    from repro.kernels import ops
+
+    if stacked.ndim > 3:
+        K, D = stacked.shape[0], stacked.shape[-1]
+        out = ops.merge_pool(stacked.reshape(K, -1, D), strategy=strategy)
+        out_d = K * D if strategy == "concat" else D
+        return out.reshape(stacked.shape[1:-1] + (out_d,))
+    return ops.merge_pool(stacked, strategy=strategy)
+
+
+def tree_mean(trees):
+    return jax.tree_util.tree_map(
+        lambda *leaves: sum(leaves) / len(leaves), *trees
+    )
+
+
+@dataclass
+class ExecReport:
+    """Measured (wall-clock) sibling of ``engine.SimReport`` — same field
+    contract, but ``step_time_s`` is real elapsed time on a real transport
+    and ``live`` reflects deadlines that actually fired."""
+
+    mode: str
+    transport: str
+    step_time_s: float
+    microbatches: int
+    live: list[list[float]]
+    misses_per_client: list[int]
+    cut_bytes_per_client: int
+    collective_bytes_per_client: int
+    deadline_s: Optional[float] = None  # last deadline used (nowait)
+
+    @property
+    def total_misses(self) -> int:
+        return sum(self.misses_per_client)
+
+
+@dataclass
+class ExecutionResult:
+    loss: jnp.ndarray
+    tower_grads: Optional[list]
+    server_grads: object
+    ledger: Ledger
+    report: object  # SimReport (simulated liveness) or ExecReport (measured)
+    ema_state: Optional[dict]
+
+
+class Executor:
+    """Role-0 server driving one training step per :meth:`run_step` call."""
+
+    def __init__(self, transport, server_fwd: Callable, loss_fn: Callable,
+                 merge: str, *, mode: str = "pipelined", microbatches: int = 1,
+                 label_holder: int = 0, drop_policy: Optional[str] = None,
+                 ema_decay: float = 0.95, deadline=None):
+        if mode not in ("serial", "pipelined", "nowait"):
+            raise ValueError(f"mode must be serial|pipelined|nowait, got {mode!r}")
+        if drop_policy is None:
+            drop_policy = "impute" if mode == "nowait" else "fused"
+        if drop_policy not in DROP_POLICIES:
+            raise ValueError(f"drop_policy must be one of {DROP_POLICIES}")
+        self.transport = transport
+        self.server_fwd = server_fwd
+        self.loss_fn = loss_fn
+        self.merge = merge
+        self.mode = mode
+        self.microbatches = microbatches
+        self.label_holder = label_holder
+        self.drop_policy = drop_policy
+        self.ema_decay = ema_decay
+        # deadline: None -> bootstrap an AdaptiveDeadline from the first
+        # full barrier; float -> static window; AdaptiveDeadline -> as given
+        if deadline is None:
+            self.deadline = AdaptiveDeadline(transport.num_clients)
+            self.static_deadline_s = None
+        elif isinstance(deadline, AdaptiveDeadline):
+            self.deadline = deadline
+            self.static_deadline_s = None
+        else:
+            self.deadline = None
+            self.static_deadline_s = float(deadline)
+
+    # -- one step -----------------------------------------------------------
+
+    def run_step(self, server_params, labels, *, step: int = 0,
+                 features: Optional[list] = None, liveness=None,
+                 merge_mask=None, ema_state: Optional[dict] = None,
+                 ledger: Optional[Ledger] = None, collect_grads: bool = True,
+                 report=None) -> ExecutionResult:
+        """Execute one protocol step.
+
+        ``features`` (per-client arrays, batch-major) are shipped in the
+        forward requests; omit them when workers own a ``feature_fn``.
+        ``liveness`` is an (M, K) 0/1 matrix from a simulated clock; without
+        it, ``"nowait"`` measures liveness against wall-clock deadlines and
+        other modes barrier on all K cuts.  A ``report`` passed in (the
+        simulated clock's) is returned untouched; otherwise a measured
+        :class:`ExecReport` is built.
+        """
+        transport, K, M = self.transport, self.transport.num_clients, self.microbatches
+        B = labels.shape[0]
+        if B % M:
+            raise ValueError(f"batch {B} not divisible by microbatches={M}")
+        mbsz = B // M
+        ledger = ledger if ledger is not None else Ledger()
+        schedule = step_schedule(K, self.label_holder)
+        t0 = time.monotonic()
+
+        # submit every tower forward upfront: clients stream microbatches in
+        # order on their own resources (the overlap the pipeline exists for)
+        for m in range(M):
+            for spec in schedule.cuts:
+                req = {"op": "forward", "step": step, "mb": m}
+                if features is not None:
+                    sl = slice(m * mbsz, (m + 1) * mbsz)
+                    req["feats"] = features[spec.client][sl]
+                transport.submit(spec.client, req)
+
+        cuts_buf: dict[int, dict] = {}
+        first_t: dict[int, float] = {}
+        step_done = [False] * K
+        final_grads: list = [None] * K
+        losses, server_grad_acc, live_matrix = [], [], []
+        misses = [0] * K
+        last_deadline: Optional[float] = self.static_deadline_s
+
+        def drain(timeout: Optional[float]) -> bool:
+            got = transport.next_response(timeout)
+            if got is None:
+                return False
+            k, resp = got
+            op = resp["op"]
+            if op == "cut":
+                now = time.monotonic()
+                m = resp["mb"]
+                cuts_buf.setdefault(m, {})[k] = jnp.asarray(resp["cut"])
+                if m not in first_t:
+                    first_t[m] = now
+                if self.deadline is not None:
+                    # late arrivals observe too: a recovered straggler must
+                    # be able to loosen the deadline back open
+                    self.deadline.observe(k, now - first_t[m])
+                ledger.record_spec(schedule.cuts[k], resp["cut"])
+            elif op == "step_done":
+                step_done[k] = True
+                if resp.get("grad") is not None:
+                    final_grads[k] = jax.tree_util.tree_map(
+                        jnp.asarray, resp["grad"])
+            # "grad" responses are per-microbatch acks; nothing to do
+            return True
+
+        for m in range(M):
+            live_row, deadline_used = self._gather(
+                m, cuts_buf, first_t, drain, liveness)
+            if deadline_used is not None:
+                last_deadline = deadline_used
+            for k in range(K):
+                if live_row[k] <= 0:
+                    misses[k] += 1
+            live_matrix.append(live_row)
+
+            arrived = cuts_buf.pop(m, {})
+            proto = next(iter(arrived.values()))
+            stacked = jnp.stack([
+                arrived.get(k, jnp.zeros_like(proto)) for k in range(K)
+            ])
+            if self.drop_policy == "impute" and ema_state is None:
+                ema_state = {
+                    "ema": jnp.zeros((K, stacked.shape[-1]), jnp.float32),
+                    "initialized": jnp.zeros((K,), jnp.float32),
+                }
+
+            labels_m = labels[m * mbsz:(m + 1) * mbsz]
+            live_vec = jnp.asarray(live_row, jnp.float32)
+
+            def server_loss(server_p, stacked_cuts):
+                if self.drop_policy == "impute":
+                    imputed, new_ema = straggler_lib.impute_stack(
+                        stacked_cuts, live_vec, ema_state,
+                        decay=self.ema_decay)
+                    merged = fast_merge(imputed, self.merge)
+                elif self.drop_policy == "neutral":
+                    new_ema = ema_state
+                    merged = merge_lib.merge_stacked(
+                        stacked_cuts, self.merge, live_mask=merge_mask)
+                else:
+                    new_ema = ema_state
+                    merged = fast_merge(stacked_cuts, self.merge)
+                logits = self.server_fwd(server_p, merged)
+                return self.loss_fn(logits, labels_m), (logits, new_ema)
+
+            (loss_m, (logits, ema_state)), (sg, cut_grads) = jax.value_and_grad(
+                server_loss, argnums=(0, 1), has_aux=True
+            )(server_params, stacked)
+            ledger.record_spec(schedule.head_out, logits)
+            ledger.record_spec(schedule.head_jac, logits)
+
+            for spec in schedule.jacs:
+                k = spec.client
+                # serial/neutral semantics: jacobians flow to every client;
+                # no-wait: a missed deadline skips this microbatch's update
+                if self.drop_policy == "neutral" or live_row[k] > 0:
+                    ledger.record_spec(spec, cut_grads[k])
+                    transport.submit(k, {
+                        "op": "backward", "step": step, "mb": m,
+                        "jac": cut_grads[k],
+                    })
+            losses.append(loss_m)
+            server_grad_acc.append(sg)
+
+        for k in range(K):
+            transport.submit(k, {
+                "op": "finish_step", "step": step, "microbatches": M,
+                "collect": collect_grads,
+            })
+        while not all(step_done):
+            if not drain(None):
+                raise RuntimeError("transport idle while awaiting step_done")
+
+        loss = sum(losses) / M
+        server_grads = tree_mean(server_grad_acc)
+        tower_grads = list(final_grads) if collect_grads else None
+        if report is None:
+            report = self._build_report(
+                time.monotonic() - t0, live_matrix, misses, ledger,
+                stacked, last_deadline)
+        return ExecutionResult(loss, tower_grads, server_grads, ledger,
+                               report, ema_state)
+
+    # -- gathering ----------------------------------------------------------
+
+    def _gather(self, m, cuts_buf, first_t, drain, liveness):
+        """Collect microbatch ``m``'s cuts; returns (live_row, deadline_s)."""
+        K = self.transport.num_clients
+
+        def have() -> int:
+            return len(cuts_buf.get(m, {}))
+
+        if liveness is not None:
+            # simulated clock: the transport delivers every cut; the given
+            # matrix decides who made the merge
+            while have() < K:
+                if not drain(None):
+                    raise RuntimeError("transport idle with cuts outstanding")
+            return [float(x) for x in liveness[m]], None
+
+        if self.mode != "nowait":
+            while have() < K:
+                if not drain(None):
+                    raise RuntimeError("transport idle with cuts outstanding")
+            return [1.0] * K, None
+
+        # real no-wait: grace window after the first arrival
+        deadline_used = None
+        while have() < K:
+            if m not in first_t:
+                drain(None)  # the first cut opens the window
+                continue
+            d = self.static_deadline_s
+            if d is None:
+                d = self.deadline.deadline_s()
+            if d is None:
+                # bootstrap barrier: no estimate yet, wait for everyone
+                if not drain(None):
+                    raise RuntimeError("transport idle with cuts outstanding")
+                continue
+            deadline_used = d
+            remaining = (first_t[m] + d) - time.monotonic()
+            if remaining <= 0:
+                # window expired — but sweep the queue first: a cut that was
+                # DELIVERED while role 0 was busy on an earlier microbatch
+                # beat the deadline and must not be counted as a miss (the
+                # drain timestamp, not the true arrival, is all we see)
+                while have() < K and drain(0.0):
+                    pass
+                if have() < K:
+                    break
+                continue
+            drain(remaining)
+        if (self.deadline is not None and self.deadline.initial_s is None
+                and have() == K):
+            # seed the adaptive controller from the first full barrier
+            self.deadline.seed_from_observations()
+        arrived = cuts_buf.get(m, {})
+        return [1.0 if k in arrived else 0.0 for k in range(K)], deadline_used
+
+    def _build_report(self, elapsed_s, live_matrix, misses, ledger, stacked,
+                      deadline_s) -> ExecReport:
+        K = self.transport.num_clients
+        per_mb_elements = int(stacked[0].size)
+        return ExecReport(
+            mode=self.mode,
+            transport=type(self.transport).__name__,
+            step_time_s=elapsed_s,
+            microbatches=self.microbatches,
+            live=live_matrix,
+            misses_per_client=misses,
+            cut_bytes_per_client=ledger.bytes_with_tag("cut[0]"),
+            collective_bytes_per_client=self.microbatches
+            * collective_bytes_per_merge(
+                self.merge, per_mb_elements, K,
+                stacked.dtype.itemsize),
+            deadline_s=deadline_s,
+        )

@@ -1,4 +1,17 @@
-"""Training loop: metrics, checkpointing, sharding-aware step dispatch."""
+"""Training loop: metrics, checkpointing, sharding-aware step dispatch.
+
+Two drivers:
+
+* :func:`train` — the monolithic jitted step (centralized or vertical; the
+  protocol is arithmetic-identical, paper §3), one host, fastest clock.
+* :func:`train_split` — SPLIT EXECUTION: the transformer LM trains through
+  the protocol for real — per-role workers behind a
+  :class:`~repro.transport.Transport` (threads or processes), the
+  :class:`~repro.runtime.executor.Executor` driving ``step_schedule`` at
+  role 0, tower params updating locally at the clients, and (``--runtime
+  nowait``) EMA imputation filling deadline-missed seats in the real tower
+  forward.  Step 0 is verified against the serial ``protocol_step``.
+"""
 from __future__ import annotations
 
 import time
@@ -84,3 +97,183 @@ def train(
     if checkpoint_path:
         save_checkpoint(checkpoint_path, params, step=steps)
     return params, metrics
+
+
+# ---------------------------------------------------------------------------
+# split execution
+# ---------------------------------------------------------------------------
+
+def _make_transport(cfg: ArchConfig, transport: str, *, seed, batch, seq,
+                    microbatches, learning_rate, warmup, steps, grad_clip,
+                    straggler: Optional[int], straggler_delay_s: float):
+    from repro.transport import (InprocTransport, MultiprocTransport,
+                                 WorkerSpec, build_lm_worker)
+
+    K = cfg.vertical.num_clients
+    kwargs = dict(cfg=cfg, seed=seed, batch=batch, seq=seq,
+                  microbatches=microbatches, learning_rate=learning_rate,
+                  warmup=warmup, steps=steps, grad_clip=grad_clip)
+
+    def delay(k: int) -> float:
+        return straggler_delay_s if k == straggler else 0.0
+
+    if transport == "inproc":
+        workers = [build_lm_worker(k, forward_delay_s=delay(k), **kwargs)
+                   for k in range(K)]
+        return InprocTransport(workers)
+    if transport == "multiproc":
+        specs = [WorkerSpec(build_lm_worker,
+                            dict(kwargs, forward_delay_s=delay(k)))
+                 for k in range(K)]
+        return MultiprocTransport(specs)
+    raise ValueError(f"unknown split transport {transport!r}")
+
+
+def _verify_step0(res, tower_fwd, server_fwd, loss_fn, tower_params,
+                  server_params, tokens, labels, merge, atol, print_fn):
+    """The acceptance identity: the transport's step-0 gradients must match
+    the serial ``protocol_step`` on the same decomposition."""
+    from repro.core.protocol import protocol_step
+
+    K = len(tower_params)
+    loss_ref, tg_ref, sg_ref, _ = protocol_step(
+        tower_fwd, server_fwd, loss_fn, tower_params, server_params,
+        [tokens] * K, labels, merge,
+    )
+    got = jax.tree_util.tree_leaves((res.tower_grads, res.server_grads))
+    want = jax.tree_util.tree_leaves((tg_ref, sg_ref))
+    max_dev = max(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+        for a, b in zip(got, want)
+    )
+    loss_dev = abs(float(res.loss) - float(loss_ref))
+    if max_dev > atol or loss_dev > atol:
+        raise RuntimeError(
+            f"step-0 gradients diverge from the serial protocol_step: "
+            f"max |dgrad| {max_dev:.3e}, |dloss| {loss_dev:.3e} > {atol:g}")
+    print_fn(f"step-0 verification vs protocol_step: max |dgrad| "
+             f"{max_dev:.2e} (<= {atol:g}) OK")
+
+
+def train_split(
+    cfg: ArchConfig,
+    loader,
+    *,
+    steps: int = 100,
+    batch: int = 8,
+    seq: int = 256,
+    transport: str = "inproc",
+    runtime: str = "serial",
+    microbatches: int = 1,
+    learning_rate: float = 3e-4,
+    warmup: int = 20,
+    grad_clip: float = 1.0,
+    log_every: int = 10,
+    seed: int = 0,
+    straggler: Optional[int] = None,
+    straggler_delay_s: float = 0.25,
+    verify_step0: bool = True,
+    verify_atol: float = 1e-5,
+    print_fn: Callable = print,
+):
+    """Train the vertically-split LM through the Executor over a real
+    transport.  Returns ({"towers": [...], "server": ...}, metrics, report).
+
+    The driver is the role-0 server: it owns the server trunk + unembed
+    head and the labels; each feature holder owns its tower and
+    embedding-table slice and regenerates its token stream from the shared
+    seed (see ``repro.transport.builders.build_lm_worker``).  ``runtime``
+    selects the schedule: ``serial`` (M=1 barrier), ``pipelined``
+    (microbatched, staleness 0) or ``nowait`` (adaptive deadlines + EMA
+    imputation in the real tower forward).
+    """
+    from repro.runtime.executor import Executor
+
+    if cfg.vertical is None:
+        raise ValueError("train_split needs a vertical config")
+    mode = "serial" if runtime == "serial" else runtime
+    M = 1 if runtime == "serial" else microbatches
+
+    tower_fwd, server_fwd, loss_fn = backbone.make_split_lm_fns(cfg)
+    params = backbone.init_params(cfg, jax.random.PRNGKey(seed))
+    tower_params, server_params = backbone.split_lm_params(cfg, params)
+
+    opt = AdamW(
+        learning_rate=linear_warmup_cosine(learning_rate, warmup, steps),
+        weight_decay=0.1, grad_clip_norm=grad_clip,
+    )
+    opt_state = opt.init(server_params)
+
+    tr = _make_transport(
+        cfg, transport, seed=seed, batch=batch, seq=seq, microbatches=M,
+        learning_rate=learning_rate, warmup=warmup, steps=steps,
+        grad_clip=grad_clip, straggler=straggler,
+        straggler_delay_s=straggler_delay_s,
+    )
+    executor = Executor(tr, server_fwd, loss_fn, cfg.vertical.merge,
+                        mode=mode, microbatches=M)
+
+    metrics = TrainMetrics()
+    report = None
+    ema_state = None
+    it = iter(loader)
+    try:
+        for step in range(steps):
+            b = next(it)
+            tokens = jnp.asarray(b["tokens"])
+            labels = jnp.asarray(b["labels"])
+            t0 = time.time()
+            res = executor.run_step(
+                server_params, labels, step=step, ema_state=ema_state,
+                collect_grads=(step == 0 and verify_step0),
+            )
+            if step == 0 and verify_step0:
+                if mode == "nowait" and res.report.total_misses > 0:
+                    # the §3 identity only holds at staleness 0: a step-0
+                    # deadline miss legitimately reroutes gradients through
+                    # the EMA imputation
+                    print_fn("step-0 verification skipped: "
+                             f"{res.report.total_misses} no-wait deadline "
+                             "miss(es) — gradients are intentionally "
+                             "imputed, not serial")
+                else:
+                    _verify_step0(res, tower_fwd, server_fwd, loss_fn,
+                                  tower_params, server_params, tokens,
+                                  labels, cfg.vertical.merge, verify_atol,
+                                  print_fn)
+            server_params, opt_state = opt.update(
+                server_params, res.server_grads, opt_state)
+            ema_state = res.ema_state
+            report = res.report
+            loss = float(res.loss)
+            dt = time.time() - t0
+            metrics.log(step, loss, dt)
+            if step % log_every == 0 or step == steps - 1:
+                miss = res.report.total_misses if res.report else 0
+                print_fn(f"step {step:5d}  loss {loss:8.4f}  {dt*1e3:8.1f} ms"
+                         f"  [{transport}/{mode}"
+                         + (f" misses={miss}" if mode == "nowait" else "")
+                         + "]")
+        final_towers = _collect_tower_params(tr)
+    finally:
+        tr.close()
+    return ({"towers": final_towers, "server": server_params},
+            metrics, report)
+
+
+def _collect_tower_params(tr):
+    """Fetch each client's final tower params (checkpointing/inspection)."""
+    K = tr.num_clients
+    out: list = [None] * K
+    for k in range(K):
+        tr.submit(k, {"op": "get_params"})
+    seen = 0
+    while seen < K:
+        got = tr.next_response(60.0)
+        if got is None:
+            raise RuntimeError("timed out collecting tower params")
+        k, resp = got
+        if resp["op"] == "params":
+            out[k] = jax.tree_util.tree_map(jnp.asarray, resp["params"])
+            seen += 1
+    return out

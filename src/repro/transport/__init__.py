@@ -1,0 +1,59 @@
+"""Pluggable transport layer: execute the split-learning protocol for real.
+
+The paper's roles run on *separate hosts* exchanging only cut activations
+and jacobians.  ``repro.core.protocol`` defines the message schedule and
+``repro.runtime`` clocks it; this package moves the payloads — the SAME
+schedule driven by :class:`~repro.runtime.executor.Executor` over one of
+three backends:
+
+* ``SimTransport``   — inline, synchronous, deterministic.  The numerics
+  backend of ``protocol_step`` / ``pipelined_step``; no concurrency, the
+  federation clock comes from ``repro.runtime.engine`` simulation.
+* ``InprocTransport`` — one thread per feature-holder with request/response
+  queues.  Real overlap on one host: client tower forwards run concurrently
+  with the role-0 merge/backward (jax releases the GIL inside compiled
+  computations).
+* ``MultiprocTransport`` — one OS process per feature-holder, connected to
+  the role-0 server over TCP loopback sockets with length-prefixed pickle
+  frames.  Each child holds ONLY its own tower params and feature source
+  (regenerated from the shared seed); the only tensors on the wire are the
+  protocol's cut activations and jacobians, which is what the per-role
+  :class:`~repro.core.protocol.Ledger` audits against ``repro.core.costs``.
+
+Transport contract (star topology, role 0 is the caller):
+
+* ``submit(client, request)`` — enqueue one request dict to a client; FIFO
+  per client, non-blocking.
+* ``next_response(timeout)`` — the next ``(client, response)`` pair from
+  any client, or ``None`` if ``timeout`` (seconds) elapses; ``timeout=None``
+  blocks (``SimTransport`` never blocks: it returns ``None`` when idle).
+* ``close()`` — shut every client down; idempotent.
+
+Worker protocol (requests handled by :class:`TowerWorker`):
+
+* ``forward  {step, mb[, feats]}``        -> ``cut  {mb, cut}``
+* ``backward {step, mb, jac}``            -> ``grad {mb}`` (ack)
+* ``finish_step {step, microbatches, collect}`` -> ``step_done {grad?}``
+  (averages accumulated tower grads over M, applies the local optimizer
+  update when configured, returns the average iff ``collect``)
+* ``get_params {}``                       -> ``params {params}``
+* ``shutdown {}``                         -> ``bye {}``
+"""
+from repro.transport.base import SimTransport, TowerWorker, Transport
+from repro.transport.builders import build_lm_worker, build_mlp_worker
+from repro.transport.inproc import InprocTransport
+from repro.transport.multiproc import MultiprocTransport, WorkerSpec
+
+TRANSPORTS = ("sim", "inproc", "multiproc")
+
+__all__ = [
+    "TRANSPORTS",
+    "Transport",
+    "TowerWorker",
+    "SimTransport",
+    "InprocTransport",
+    "MultiprocTransport",
+    "WorkerSpec",
+    "build_lm_worker",
+    "build_mlp_worker",
+]

@@ -1,0 +1,167 @@
+"""Transport interface + the role-1/3 worker logic + the inline backend.
+
+``TowerWorker`` is the feature-holder endpoint, transport-agnostic: it owns
+this client's tower params (and optionally a local optimizer and feature
+source) and serves the request ops documented in the package docstring.
+Backends differ only in WHERE ``handle`` runs (caller's thread, a worker
+thread, another process) and how requests/responses move.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Transport:
+    """Star-topology message plane; role 0 (the executor) is the caller."""
+
+    num_clients: int
+
+    def submit(self, client: int, request: dict) -> None:
+        raise NotImplementedError
+
+    def next_response(self, timeout: Optional[float] = None):
+        """Next ``(client, response)`` from any client, else ``None`` on
+        timeout.  FIFO per client; cross-client order is arrival order."""
+        raise NotImplementedError
+
+    def close(self) -> None:
+        raise NotImplementedError
+
+    def __enter__(self) -> "Transport":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class TowerWorker:
+    """Role-1/3 endpoint: tower forward/backward + optional local update.
+
+    ``tower_fwd(params, feats) -> cut``; the backward objective is the same
+    f32 vdot as ``protocol_step`` so gradients agree bit-for-bit with the
+    serial path.  ``feature_fn(step, mb) -> feats`` lets the worker own its
+    data (multiproc children regenerate slices from the shared seed);
+    requests may instead carry ``feats`` inline (sim/inproc wrappers).
+    ``optimizer`` (repro.optim-style ``init``/``update``) enables local
+    parameter updates at ``finish_step`` — the real split-learning flow,
+    where tower params never leave the client.  ``forward_delay_s``
+    artificially slows this client's forwards: the wall-clock straggler
+    scenario the no-wait deadlines exist for, injectable on any transport.
+    """
+
+    def __init__(self, client_id: int, tower_fwd: Callable, tower_params, *,
+                 feature_fn: Optional[Callable] = None, optimizer=None,
+                 forward_delay_s: float = 0.0):
+        self.client_id = client_id
+        self.tower_fwd = tower_fwd
+        self.params = tower_params
+        self.feature_fn = feature_fn
+        self.optimizer = optimizer
+        self.forward_delay_s = forward_delay_s
+        self.opt_state = optimizer.init(tower_params) if optimizer else None
+        self._feats: dict = {}  # (step, mb) -> feats awaiting backward
+        self._grad_sum = None
+        self._step = None
+
+    # -- ops ----------------------------------------------------------------
+
+    def handle(self, request: dict) -> Optional[dict]:
+        op = request["op"]
+        if op == "forward":
+            return self._forward(request)
+        if op == "backward":
+            return self._backward(request)
+        if op == "finish_step":
+            return self._finish_step(request)
+        if op == "get_params":
+            return {"op": "params", "client": self.client_id,
+                    "params": self.params}
+        if op == "shutdown":
+            return {"op": "bye", "client": self.client_id}
+        raise ValueError(f"unknown op {op!r}")
+
+    def _forward(self, request: dict) -> dict:
+        if self.forward_delay_s > 0.0:
+            time.sleep(self.forward_delay_s)
+        step, mb = request["step"], request["mb"]
+        feats = request.get("feats")
+        if feats is None:
+            if self.feature_fn is None:
+                raise ValueError(
+                    f"client {self.client_id}: no feats in request and no "
+                    "feature_fn configured")
+            feats = self.feature_fn(step, mb)
+        feats = jnp.asarray(feats)
+        self._feats[(step, mb)] = feats
+        cut = self.tower_fwd(self.params, feats)
+        return {"op": "cut", "client": self.client_id, "step": step,
+                "mb": mb, "cut": cut}
+
+    def _backward(self, request: dict) -> dict:
+        step, mb = request["step"], request["mb"]
+        feats = self._feats.pop((step, mb))
+        jac = jnp.asarray(request["jac"])
+
+        def tower_obj(tp):
+            return jnp.vdot(
+                self.tower_fwd(tp, feats).astype(jnp.float32),
+                jac.astype(jnp.float32),
+            )
+
+        grad = jax.grad(tower_obj)(self.params)
+        if self._grad_sum is None:
+            self._grad_sum = grad
+        else:
+            self._grad_sum = jax.tree_util.tree_map(
+                jnp.add, self._grad_sum, grad)
+        return {"op": "grad", "client": self.client_id, "step": step,
+                "mb": mb}
+
+    def _finish_step(self, request: dict) -> dict:
+        step = request["step"]
+        M = request.get("microbatches", 1)
+        # microbatches whose jacobian never arrived (no-wait misses)
+        # contribute zero — dividing the SUM by M reproduces the serial
+        # path's zero-padded tree_mean exactly
+        if self._grad_sum is None:
+            avg = jax.tree_util.tree_map(jnp.zeros_like, self.params)
+        else:
+            avg = jax.tree_util.tree_map(lambda g: g / M, self._grad_sum)
+        if self.optimizer is not None:
+            self.params, self.opt_state = self.optimizer.update(
+                self.params, avg, self.opt_state)
+        self._grad_sum = None
+        self._feats.clear()
+        self._step = step
+        return {"op": "step_done", "client": self.client_id, "step": step,
+                "grad": avg if request.get("collect") else None}
+
+
+class SimTransport(Transport):
+    """Inline backend: ``submit`` runs the worker on the calling thread and
+    queues the response.  Fully deterministic, zero concurrency — the
+    numerics engine behind ``protocol_step`` / ``pipelined_step`` (the
+    federation clock is simulated separately by ``repro.runtime.engine``)."""
+
+    def __init__(self, workers: list[TowerWorker]):
+        self.workers = workers
+        self.num_clients = len(workers)
+        self._responses: deque = deque()
+
+    def submit(self, client: int, request: dict) -> None:
+        resp = self.workers[client].handle(request)
+        if resp is not None and resp["op"] != "bye":
+            self._responses.append((client, resp))
+
+    def next_response(self, timeout: Optional[float] = None):
+        if not self._responses:
+            return None
+        return self._responses.popleft()
+
+    def close(self) -> None:
+        self._responses.clear()

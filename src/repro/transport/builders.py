@@ -1,0 +1,105 @@
+"""Picklable feature-holder builders for spawned client processes.
+
+A :class:`~repro.transport.multiproc.MultiprocTransport` child cannot be
+handed live params or closures — the deployment-shaped contract is that a
+client constructs its OWN tower params (same seeded init as the driver) and
+its OWN feature source, so nothing but protocol messages ever crosses the
+process boundary.  These builders are module-level (importable in the
+child) and take only small picklable config; the inproc/sim paths reuse
+them so every backend runs the identical worker.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.transport.base import TowerWorker
+
+
+def _sgd(learning_rate: float):
+    """Dependency-free local optimizer for MLP workers (tests/examples)."""
+
+    class _SGD:
+        def init(self, params):
+            return None
+
+        def update(self, params, grads, state):
+            return jax.tree_util.tree_map(
+                lambda p, g: p - learning_rate * g, params, grads), state
+
+    return _SGD()
+
+
+def build_mlp_worker(client_id: int, *, cfg, param_seed: int = 0,
+                     data_seed: int = 0, batch: int = 16,
+                     microbatches: int = 1, learning_rate: Optional[float] = None,
+                     forward_delay_s: float = 0.0) -> TowerWorker:
+    """Paper-MLP feature holder: regenerates the shared seeded init, keeps
+    only its own tower, and serves its own feature columns of the synthetic
+    stream ``x_step ~ N(0, 1)`` keyed by ``data_seed + step``."""
+    from repro.core import split_model, towers
+
+    params = split_model.init_split_mlp(jax.random.PRNGKey(param_seed), cfg)
+    tower = params["towers"][client_id]
+    idx = jnp.asarray(split_model.feature_slices(cfg)[client_id].indices)
+    mbsz = batch // microbatches
+
+    def feature_fn(step: int, mb: int):
+        ks = jax.random.split(jax.random.PRNGKey(data_seed + step), 2)
+        x = jax.random.normal(ks[0], (batch, cfg.input_dim))
+        return x[mb * mbsz:(mb + 1) * mbsz, idx]
+
+    return TowerWorker(
+        client_id, towers.mlp_tower_apply, tower, feature_fn=feature_fn,
+        optimizer=_sgd(learning_rate) if learning_rate else None,
+        forward_delay_s=forward_delay_s,
+    )
+
+
+def build_lm_worker(client_id: int, *, cfg, seed: int = 0, batch: int = 8,
+                    seq: int = 256, microbatches: int = 1,
+                    learning_rate: Optional[float] = None, warmup: int = 20,
+                    steps: int = 100, grad_clip: float = 1.0,
+                    forward_delay_s: float = 0.0) -> TowerWorker:
+    """Vertically-split LM feature holder.
+
+    Reconstructs the full seeded init (cheap at these scales) and keeps
+    client ``client_id``'s tower + embedding-table slice; regenerates the
+    shared token stream from the same ``LMBatchLoader`` seed as the driver
+    and serves per-microbatch slices.  With ``learning_rate`` set, tower
+    params train locally under the same AdamW schedule as the server —
+    they never leave this process.
+    """
+    from repro.data.loader import LMBatchLoader
+    from repro.models import backbone
+    from repro.optim import AdamW
+    from repro.optim.schedules import linear_warmup_cosine
+
+    params = backbone.init_params(cfg, jax.random.PRNGKey(seed))
+    towers_list, _ = backbone.split_lm_params(cfg, params)
+    tower_fwd, _, _ = backbone.make_split_lm_fns(cfg)
+
+    optimizer = None
+    if learning_rate:
+        optimizer = AdamW(
+            learning_rate=linear_warmup_cosine(learning_rate, warmup, steps),
+            weight_decay=0.1, grad_clip_norm=grad_clip,
+        )
+
+    loader_it = iter(LMBatchLoader(cfg, batch, seq, seed=seed))
+    state = {"step": -1, "tokens": None}
+    mbsz = batch // microbatches
+
+    def feature_fn(step: int, mb: int):
+        while state["step"] < step:  # steps arrive in order; advance lazily
+            state["tokens"] = jnp.asarray(next(loader_it)["tokens"])
+            state["step"] += 1
+        return state["tokens"][mb * mbsz:(mb + 1) * mbsz]
+
+    return TowerWorker(
+        client_id, tower_fwd, towers_list[client_id],
+        feature_fn=feature_fn, optimizer=optimizer,
+        forward_delay_s=forward_delay_s,
+    )

@@ -1,0 +1,73 @@
+"""In-process transport: one thread per feature-holder, queue-connected.
+
+Real overlap on a single host: every client services its FIFO request queue
+on its own thread, so tower forwards for later microbatches run while the
+role-0 caller merges/backprops earlier ones — jax releases the GIL inside
+compiled computations, so the overlap is genuine parallelism on multicore
+hosts, not just interleaving.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Optional
+
+from repro.transport.base import TowerWorker, Transport
+
+_SHUTDOWN = object()
+
+
+class InprocTransport(Transport):
+    def __init__(self, workers: list[TowerWorker]):
+        self.num_clients = len(workers)
+        self._requests = [queue.SimpleQueue() for _ in workers]
+        self._responses: queue.SimpleQueue = queue.SimpleQueue()
+        self._threads = [
+            threading.Thread(
+                target=self._serve, args=(k, workers[k]), daemon=True,
+                name=f"splitnn-client{k}",
+            )
+            for k in range(self.num_clients)
+        ]
+        self._closed = False
+        for t in self._threads:
+            t.start()
+
+    def _serve(self, client: int, worker: TowerWorker) -> None:
+        while True:
+            request = self._requests[client].get()
+            if request is _SHUTDOWN:
+                return
+            try:
+                resp = worker.handle(request)
+            except Exception as e:  # surface worker crashes to the caller
+                self._responses.put(
+                    (client, {"op": "error", "client": client,
+                              "error": repr(e)}))
+                continue
+            if resp is not None:
+                if resp["op"] == "bye":
+                    return
+                self._responses.put((client, resp))
+
+    def submit(self, client: int, request: dict) -> None:
+        self._requests[client].put(request)
+
+    def next_response(self, timeout: Optional[float] = None):
+        try:
+            client, resp = self._responses.get(timeout=timeout)
+        except queue.Empty:
+            return None
+        if resp.get("op") == "error":
+            raise RuntimeError(
+                f"client {client} worker failed: {resp['error']}")
+        return client, resp
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        for q in self._requests:
+            q.put(_SHUTDOWN)
+        for t in self._threads:
+            t.join(timeout=5.0)

@@ -140,6 +140,39 @@ def test_nowait_bounds_straggler_step_time():
     assert nowait.step_time_s < 0.5 * wait.step_time_s
 
 
+def test_adaptive_deadline_tightens_in_simulation():
+    """With no explicit deadline, the EWMA controller drives the no-wait
+    window: after the first microbatch it tightens below the static
+    default (the straggler is excluded from the healthy max), so the
+    adaptive step can only be as fast or faster — with the same misses."""
+    from repro.runtime import AdaptiveDeadline
+
+    cfg = dataclasses.replace(FINANCIAL_PHRASEBANK, merge="avg")
+    plan = plan_step(cfg, batch_size=512, microbatches=8)
+    link = LinkModel.uniform(cfg.num_clients).with_straggler(2, slowdown=10.0)
+
+    static = simulate_pipelined(
+        plan, link, mode="nowait",
+        deadline_s=default_deadline_s(plan, link))
+    ctl = AdaptiveDeadline(
+        cfg.num_clients, initial_s=default_deadline_s(plan, link))
+    adaptive = simulate_pipelined(plan, link, mode="nowait", deadline=ctl)
+
+    # the straggler misses essentially every merge; a healthy client may
+    # lose at most one early microbatch while the EWMAs are still learning
+    # the uplink-contention spread (no-wait imputes it — that is the deal)
+    assert adaptive.misses_per_client[2] >= plan.microbatches - 1
+    healthy_misses = sum(adaptive.misses_per_client) - adaptive.misses_per_client[2]
+    assert healthy_misses <= 1
+    assert adaptive.step_time_s <= static.step_time_s + 1e-9
+    # the controller actually learned the federation: every client observed,
+    # the straggler's EWMA well above the healthy cluster
+    spreads = ctl.spreads()
+    assert all(s is not None for s in spreads)
+    healthy = [s for k, s in enumerate(spreads) if k != 2]
+    assert spreads[2] > 10 * max(healthy)
+
+
 def test_deadline_default_is_fastest_path():
     cfg = dataclasses.replace(BANK_MARKETING, merge="avg")
     plan = plan_step(cfg, 16, 2)

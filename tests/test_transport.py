@@ -1,0 +1,312 @@
+"""Transport equivalence: the same Executor numerics over threads and real
+loopback sockets must reproduce the serial ``protocol_step`` gradients at
+staleness 0, and the per-role Ledger byte counts must match the analytic
+``core.costs`` model when the payloads cross an actual process boundary."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.vertical_mlp import BANK_MARKETING, MLPSplitConfig
+from repro.core import costs, protocol, split_model, towers
+from repro.runtime.deadline import AdaptiveDeadline
+from repro.runtime.executor import Executor
+from repro.transport import (InprocTransport, MultiprocTransport, SimTransport,
+                             TowerWorker, WorkerSpec, build_mlp_worker)
+
+TINY = MLPSplitConfig(
+    name="transport_tiny", input_dim=16, num_classes=2, num_clients=2,
+    client_feature_sizes=(8, 8), tower_hidden=(16,), cut_dim=8,
+    server_hidden=(16,), merge="avg",
+)
+
+TINY3 = MLPSplitConfig(
+    name="transport_tiny3", input_dim=12, num_classes=2, num_clients=3,
+    client_feature_sizes=(4, 4, 4), tower_hidden=(16,), cut_dim=8,
+    server_hidden=(16,), merge="avg",
+)
+
+
+def _setup(cfg, seed=0, batch=16):
+    key = jax.random.PRNGKey(seed)
+    params = split_model.init_split_mlp(key, cfg)
+    ks = jax.random.split(key, 3)
+    x = jax.random.normal(ks[0], (batch, cfg.input_dim))
+    y = jax.random.randint(ks[1], (batch,), 0, cfg.num_classes)
+    slices = split_model.feature_slices(cfg)
+    feats = [x[:, jnp.asarray(s.indices)] for s in slices]
+
+    def loss_fn(logits, labels):
+        return split_model.softmax_xent(logits, labels, cfg.num_classes)
+
+    return params, feats, y, loss_fn
+
+
+def _assert_trees_close(a, b, atol=1e-5):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(la, lb, atol=atol, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# inproc (threads): staleness-0 identity with the serial path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("microbatches", [1, 4])
+@pytest.mark.parametrize("merge", ["avg", "concat"])
+def test_inproc_matches_protocol_step(merge, microbatches):
+    cfg = dataclasses.replace(BANK_MARKETING, merge=merge)
+    params, feats, y, loss_fn = _setup(cfg)
+
+    loss_s, tg_s, sg_s, ledger_s = protocol.protocol_step(
+        towers.mlp_tower_apply, towers.mlp_tower_apply, loss_fn,
+        params["towers"], params["server"], feats, y, merge,
+    )
+    workers = [TowerWorker(k, towers.mlp_tower_apply, params["towers"][k])
+               for k in range(cfg.num_clients)]
+    with InprocTransport(workers) as tr:
+        executor = Executor(tr, towers.mlp_tower_apply, loss_fn, merge,
+                            mode="pipelined", microbatches=microbatches)
+        res = executor.run_step(params["server"], y, features=feats)
+
+    np.testing.assert_allclose(res.loss, loss_s, atol=1e-5, rtol=1e-5)
+    _assert_trees_close((res.tower_grads, res.server_grads), (tg_s, sg_s))
+    assert res.report.total_misses == 0
+    assert res.report.transport == "InprocTransport"
+    # same protocol messages as the serial schedule — only the clock moved
+    assert res.ledger.total() == ledger_s.total()
+
+
+def test_inproc_local_updates_train():
+    """Workers holding a local optimizer must actually learn: the real
+    split-learning flow where tower params never leave the client."""
+    cfg = TINY
+    batch, steps = 32, 30
+    params = split_model.init_split_mlp(jax.random.PRNGKey(0), cfg)
+    slices = split_model.feature_slices(cfg)
+    idx = [jnp.asarray(s.indices) for s in slices]
+
+    def loss_fn(logits, labels):
+        return split_model.softmax_xent(logits, labels, cfg.num_classes)
+
+    workers = [
+        build_mlp_worker(k, cfg=cfg, param_seed=0, data_seed=0, batch=batch,
+                         microbatches=1, learning_rate=0.2)
+        for k in range(cfg.num_clients)
+    ]
+    server = params["server"]
+    losses = []
+    with InprocTransport(workers) as tr:
+        executor = Executor(tr, towers.mlp_tower_apply, loss_fn, cfg.merge,
+                            mode="pipelined", microbatches=1)
+        for step in range(steps):
+            ks = jax.random.split(jax.random.PRNGKey(step), 2)
+            x = jax.random.normal(ks[0], (batch, cfg.input_dim))
+            y = (x[:, 0] > 0).astype(jnp.int32)  # learnable rule
+            res = executor.run_step(server, y, step=step,
+                                    collect_grads=False)
+            server = jax.tree_util.tree_map(
+                lambda p, g: p - 0.2 * g, server, res.server_grads)
+            losses.append(float(res.loss))
+    assert sum(losses[-5:]) / 5 < sum(losses[:5]) / 5 - 0.1, losses
+
+
+def test_inproc_nowait_wallclock_straggler():
+    """A client with a real (sleep-injected) slowdown must miss the static
+    wall-clock deadline and get EMA-imputed; the healthy majority merges."""
+    cfg = TINY3  # healthy majority of 2 around one straggler
+    params, feats, y, loss_fn = _setup(cfg)
+
+    # long enough that the straggler's second cut is still in flight when
+    # the server reaches microbatch 1 (a cut that arrives while the server
+    # is busy elsewhere is NOT late — only deadline-checked on gather)
+    delay = 2.0
+    workers = [
+        TowerWorker(k, towers.mlp_tower_apply, params["towers"][k],
+                    forward_delay_s=delay if k == 1 else 0.0)
+        for k in range(cfg.num_clients)
+    ]
+    with InprocTransport(workers) as tr:
+        executor = Executor(tr, towers.mlp_tower_apply, loss_fn, cfg.merge,
+                            mode="nowait", microbatches=2, deadline=0.15)
+        res = executor.run_step(params["server"], y, features=feats)
+
+    assert res.report.misses_per_client[1] == 2  # missed both microbatches
+    assert sum(res.report.misses_per_client) == 2
+    assert np.isfinite(float(res.loss))
+    # missed every microbatch -> zero local gradient for the straggler
+    for leaf in jax.tree_util.tree_leaves(res.tower_grads[1]):
+        np.testing.assert_allclose(leaf, np.zeros_like(leaf))
+    assert res.ema_state is not None
+
+
+def test_inproc_nowait_busy_server_does_not_fabricate_misses():
+    """A cut DELIVERED while role 0 was busy on an earlier microbatch beat
+    the deadline and must not be imputed: the expired-window path has to
+    sweep the response queue before declaring a miss."""
+    import time as _time
+
+    cfg = TINY3
+    params, feats, y, loss_fn = _setup(cfg)
+    slept = []
+
+    def slow_loss(logits, labels):
+        # the server stalls >> the deadline on the first microbatch only,
+        # long enough for every mb-1 cut to be sitting in the queue
+        if not slept:
+            slept.append(True)
+            _time.sleep(1.0)
+        return loss_fn(logits, labels)
+
+    workers = [
+        TowerWorker(k, towers.mlp_tower_apply, params["towers"][k],
+                    forward_delay_s=0.05 if k == 1 else 0.0)
+        for k in range(cfg.num_clients)
+    ]
+    with InprocTransport(workers) as tr:
+        executor = Executor(tr, towers.mlp_tower_apply, slow_loss, cfg.merge,
+                            mode="nowait", microbatches=2, deadline=0.3)
+        res = executor.run_step(params["server"], y, features=feats)
+    # client 1 is 0.05s slow — comfortably inside the 0.3s window — and its
+    # mb-1 cut lands during the server's mb-0 stall; zero misses either way
+    assert res.report.misses_per_client == [0, 0, 0], res.report
+
+
+def test_fast_merge_lm_shaped_stacks():
+    """The merge fast path must accept (K, B, S, D) transformer cut stacks
+    (flattened around the (K, B, D) kernel), for reductions AND concat."""
+    from repro.core import merge as merge_lib
+    from repro.runtime.executor import fast_merge
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 2, 5, 8))
+    for strategy in ("avg", "sum", "max", "mul", "concat"):
+        got = fast_merge(x, strategy)
+        want = merge_lib.merge_stacked(x, strategy)
+        assert got.shape == want.shape
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# multiproc (spawned processes + TCP loopback)
+# ---------------------------------------------------------------------------
+
+def test_multiproc_loopback_matches_protocol_and_costs():
+    """Real socket loopback: spawned per-role processes regenerate their own
+    tower params and feature slices from the shared seeds; gradients must
+    match the serial protocol_step to 1e-5 and the per-role Ledger byte
+    counts must match the ``core.costs`` analytic traffic model."""
+    cfg = TINY
+    batch, M = 16, 2
+
+    # the driver-side reference regenerates the same seeded state the
+    # children build for themselves (nothing is shipped to them)
+    params = split_model.init_split_mlp(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(
+        jax.random.split(jax.random.PRNGKey(0), 2)[0], (batch, cfg.input_dim))
+    y = jax.random.randint(jax.random.PRNGKey(7), (batch,), 0,
+                           cfg.num_classes)
+    slices = split_model.feature_slices(cfg)
+    feats = [x[:, jnp.asarray(s.indices)] for s in slices]
+
+    def loss_fn(logits, labels):
+        return split_model.softmax_xent(logits, labels, cfg.num_classes)
+
+    loss_s, tg_s, sg_s, _ = protocol.protocol_step(
+        towers.mlp_tower_apply, towers.mlp_tower_apply, loss_fn,
+        params["towers"], params["server"], feats, y, cfg.merge,
+    )
+
+    specs = [
+        WorkerSpec(build_mlp_worker,
+                   dict(cfg=cfg, param_seed=0, data_seed=0, batch=batch,
+                        microbatches=M))
+        for _ in range(cfg.num_clients)
+    ]
+    with MultiprocTransport(specs) as tr:
+        executor = Executor(tr, towers.mlp_tower_apply, loss_fn, cfg.merge,
+                            mode="pipelined", microbatches=M)
+        res = executor.run_step(params["server"], y, step=0)
+
+    np.testing.assert_allclose(res.loss, loss_s, atol=1e-5, rtol=1e-5)
+    _assert_trees_close((res.tower_grads, res.server_grads), (tg_s, sg_s))
+    assert res.report.transport == "MultiprocTransport"
+
+    # per-role byte accounting over the real socket vs the analytic model
+    want = costs.epoch_traffic(cfg, num_samples=batch, batch_size=batch)
+    ledger = res.ledger
+    assert ledger.sent_by("role0") == want["role0"].sent_bytes
+    assert ledger.received_by("role0") == want["role0"].received_bytes
+    assert ledger.sent_by("role3") == want["role3"].sent_bytes
+    assert ledger.received_by("role3") == want["role3"].received_bytes
+    assert ledger.sent_by("role1") == want["role1"].sent_bytes * (
+        cfg.num_clients - 1)
+
+
+# ---------------------------------------------------------------------------
+# adaptive deadline controller
+# ---------------------------------------------------------------------------
+
+def test_adaptive_deadline_tightens_and_recovers():
+    ctl = AdaptiveDeadline(4, initial_s=1.0, decay=0.5)
+    # nothing observed yet: fall back to the initial window
+    assert ctl.deadline_s() == 1.0
+    # healthy cluster with small spreads -> deadline tightens to the floor
+    for _ in range(4):
+        for k in range(3):
+            ctl.observe(k, 0.01 * (k + 1))
+        ctl.observe(3, 5.0)  # 5s straggler, excluded from the max
+    d_tight = ctl.deadline_s()
+    assert d_tight < 1.0
+    assert d_tight >= ctl.floor_frac * 1.0 - 1e-9
+    # straggler recovers -> its EWMA decays into the healthy set and the
+    # deadline loosens to cover it again
+    for _ in range(20):
+        for k in range(3):
+            ctl.observe(k, 0.01 * (k + 1))
+        ctl.observe(3, 0.4)
+    d_loose = ctl.deadline_s()
+    assert d_loose > d_tight
+    assert d_loose >= 0.4  # the recovered client now fits the window
+    # never beyond the staleness ceiling
+    assert d_loose <= ctl.ceiling_frac * 1.0
+
+
+def test_adaptive_deadline_seed_from_observations():
+    ctl = AdaptiveDeadline(3)
+    assert ctl.deadline_s() is None  # bootstrap barrier: wait for everyone
+    ctl.observe(0, 0.0)
+    ctl.observe(1, 0.002)
+    ctl.observe(2, 2.0)  # straggler in the barrier
+    ctl.seed_from_observations()
+    # the median anchoring keeps the straggler out of the baseline
+    assert ctl.initial_s < 1.0
+    assert ctl.deadline_s() is not None
+
+
+# ---------------------------------------------------------------------------
+# SimTransport parity (the wrapper backend used by protocol/pipelined_step)
+# ---------------------------------------------------------------------------
+
+def test_sim_transport_matches_inproc():
+    cfg = TINY
+    params, feats, y, loss_fn = _setup(cfg, batch=8)
+
+    def run(transport_cls):
+        workers = [TowerWorker(k, towers.mlp_tower_apply,
+                               params["towers"][k])
+                   for k in range(cfg.num_clients)]
+        tr = transport_cls(workers)
+        try:
+            executor = Executor(tr, towers.mlp_tower_apply, loss_fn,
+                                cfg.merge, mode="pipelined", microbatches=2)
+            return executor.run_step(params["server"], y, features=feats)
+        finally:
+            tr.close()
+
+    a, b = run(SimTransport), run(InprocTransport)
+    np.testing.assert_allclose(a.loss, b.loss, atol=1e-6)
+    _assert_trees_close((a.tower_grads, a.server_grads),
+                        (b.tower_grads, b.server_grads), atol=1e-6)
+    assert a.ledger.total() == b.ledger.total()
