@@ -153,6 +153,60 @@ def bench_transport(out: dict) -> None:
     out["transport"] = rows
 
 
+def bench_split_exec(out: dict) -> None:
+    """Split-execution wall-clock per model family: every registered
+    SplitProgram (dense/ssm/hybrid/moe/audio/vlm, reduced configs, 2
+    clients) trains real steps through the Executor over InprocTransport.
+    The per-family trajectory is the comparison baseline for future PRs —
+    moe rows include the router aux loss riding the protocol's role-0 ->
+    role-3 slot."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import get_arch
+    from repro.data.loader import LMBatchLoader
+    from repro.models import backbone, split_program
+    from repro.runtime.executor import Executor
+    from repro.transport import InprocTransport, TowerWorker
+
+    batch, seq, reps = 2, 16, 3
+    rows = []
+    for arch in ("smollm-360m", "mamba2-1.3b", "zamba2-7b",
+                 "deepseek-moe-16b", "whisper-tiny", "internvl2-26b"):
+        cfg = get_arch(arch).reduced()
+        program = split_program.get_program(cfg)
+        params = backbone.init_params(cfg, jax.random.PRNGKey(0))
+        towers_p, server_p = program.partition(params)
+        loader = LMBatchLoader(cfg, batch, seq, seed=0)
+        b = {k: jnp.asarray(v) for k, v in loader.next_batch().items()}
+        feats, ctx = program.features(b), program.batch_ctx(b)
+
+        workers = [TowerWorker(k, program.tower_fwd(k), towers_p[k])
+                   for k in range(program.num_clients)]
+        with InprocTransport(workers) as tr:
+            executor = Executor(tr, program.server_fwd, program.loss_fn,
+                                program.merge, mode="pipelined",
+                                microbatches=1, **program.executor_kwargs)
+            res = executor.run_step(server_p, ctx, features=feats,
+                                    collect_grads=False)  # warm / compile
+            t0 = time.time()
+            for step in range(1, reps + 1):
+                res = executor.run_step(server_p, ctx, step=step,
+                                        features=feats, collect_grads=False)
+            dt = (time.time() - t0) / reps
+        row = {
+            "family": cfg.family, "arch": cfg.name,
+            "step_time_ms": dt * 1e3,
+            "cut_bytes_per_client": res.report.cut_bytes_per_client,
+        }
+        if res.aux is not None:
+            row["aux_loss"] = float(res.aux)
+        rows.append(row)
+        _emit(f"split_exec/{cfg.family}", dt * 1e6,
+              f"{cfg.name} inproc K={program.num_clients}")
+    out["split_exec"] = rows
+
+
 def run_paper_tables(steps: int, out: dict) -> None:
     from benchmarks import paper_tables as pt
 
@@ -189,6 +243,7 @@ def main(argv=None) -> int:
     bench_kernels()
     bench_runtime(out)
     bench_transport(out)
+    bench_split_exec(out)
     steps = 400 if args.full else 60
     run_paper_tables(steps, out)
     if args.figures:
@@ -210,8 +265,8 @@ def main(argv=None) -> int:
         print("\n== roofline (from the dry-run matrix) ==")
         print(to_markdown(rows))
 
-    for name in ("runtime", "transport", "table2", "table3", "table4",
-                 "table5", "table6"):
+    for name in ("runtime", "transport", "split_exec", "table2", "table3",
+                 "table4", "table5", "table6"):
         if name in out:
             print(f"\n== {name} ==")
             for row in out[name]:

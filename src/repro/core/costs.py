@@ -55,6 +55,14 @@ def split_mlp_flops_per_sample(cfg: MLPSplitConfig) -> int:
     return total
 
 
+def aux_exchange_bytes(microbatches: int, itemsize: int = 4) -> int:
+    """Bytes of the role-0 -> role-3 auxiliary-loss slot per step: one f32
+    scalar per microbatch (families whose server network computes its own
+    loss term, e.g. the moe router load-balance loss).  Cross-checked
+    against the ledger's ``aux_loss`` tag in tests."""
+    return microbatches * itemsize
+
+
 def advise_split_depth(
     cfg: MLPSplitConfig,
     *,
@@ -63,50 +71,112 @@ def advise_split_depth(
     server_flops_per_s: float,
     batch_size: int = 32,
     min_private_layers: int = 1,
+    objective: str = "heuristic",
+    microbatches: int = 4,
+    latency_s: float = 0.0,
 ) -> dict:
-    """The paper's §4.4 placement guidance, made executable.
+    """The paper's §4.4 placement guidance, made executable — and, beyond
+    the paper, runtime-aware.
 
-    "Where the bottleneck is communication, most of the training should be
-    done in workers with roles 1 and 3 so the outputs of their networks are
-    as small as possible; where the bottleneck is compute, those workers
-    should have the minimum amount of layers to keep the data private."
+    ``objective`` selects the clock the advisor optimizes:
+
+    * ``"heuristic"`` (default) — the paper's rule verbatim: "where the
+      bottleneck is communication, most of the training should be done in
+      workers with roles 1 and 3 so the outputs of their networks are as
+      small as possible; where the bottleneck is compute, those workers
+      should have the minimum amount of layers to keep the data private."
+      Binary comm-vs-compute comparison, recommends an extreme.
+    * ``"serial"`` / ``"pipelined"`` — sweep every placement of the hidden
+      stack between towers and server and clock each candidate with
+      ``runtime.engine.simulate_serial`` / ``simulate_pipelined`` (M =
+      ``microbatches``) under a uniform :class:`~repro.runtime.links.
+      LinkModel` built from the given rates; recommend the argmin.  The two
+      clocks can legitimately disagree: the serial schedule pays every
+      client tower one after another, while the pipelined schedule runs
+      towers in parallel and serializes only the shared role-0 server — so
+      pipelining rewards pushing layers out to the (parallel) clients long
+      after the serial clock has given up on them.
 
     Returns the recommended tower depth (in units of the configured hidden
-    stack) and the estimated per-batch times for both extremes.
+    stack) plus the per-candidate step times (simulated objectives) or the
+    per-batch extreme estimates (heuristic).
     """
-    cut_bytes = batch_size * cfg.cut_dim * 4
-    comm_s = 2 * cut_bytes * cfg.num_clients / bandwidth_bytes_per_s
+    if objective not in ("heuristic", "serial", "pipelined"):
+        raise ValueError(
+            f"objective must be heuristic|serial|pipelined, got {objective!r}")
 
-    tower_flops = sum(
-        mlp_forward_flops([fs, *cfg.tower_hidden, cfg.cut_dim], batch_size)
-        for fs in cfg.client_feature_sizes
-    )
-    from repro.core.merge import merged_dim
+    if objective == "heuristic":
+        cut_bytes = batch_size * cfg.cut_dim * 4
+        comm_s = 2 * cut_bytes * cfg.num_clients / bandwidth_bytes_per_s
 
-    server_in = merged_dim(cfg.merge, cfg.cut_dim, cfg.num_clients)
-    server_flops = mlp_forward_flops(
-        [server_in, *cfg.server_hidden, cfg.num_classes], batch_size
-    )
-    t_client = tower_flops / client_flops_per_s
-    t_server = server_flops / server_flops_per_s
+        tower_flops = sum(
+            mlp_forward_flops([fs, *cfg.tower_hidden, cfg.cut_dim], batch_size)
+            for fs in cfg.client_feature_sizes
+        )
+        from repro.core.merge import merged_dim
 
-    comm_bound = comm_s > (t_client + t_server)
-    recommended = (
-        len(cfg.tower_hidden) + len(cfg.server_hidden)  # deep towers
-        if comm_bound
-        else min_private_layers  # thin towers, core on role 0
+        server_in = merged_dim(cfg.merge, cfg.cut_dim, cfg.num_clients)
+        server_flops = mlp_forward_flops(
+            [server_in, *cfg.server_hidden, cfg.num_classes], batch_size
+        )
+        t_client = tower_flops / client_flops_per_s
+        t_server = server_flops / server_flops_per_s
+
+        comm_bound = comm_s > (t_client + t_server)
+        recommended = (
+            len(cfg.tower_hidden) + len(cfg.server_hidden)  # deep towers
+            if comm_bound
+            else min_private_layers  # thin towers, core on role 0
+        )
+        return {
+            "objective": objective,
+            "comm_bound": bool(comm_bound),
+            "comm_s_per_batch": comm_s,
+            "client_s_per_batch": t_client,
+            "server_s_per_batch": t_server,
+            "recommended_tower_layers": recommended,
+            "rationale": (
+                "communication-bound: move layers into the clients so the "
+                "cut stays small" if comm_bound else
+                "compute-bound: keep towers at the privacy-minimum and put "
+                "the core on the role-0 worker"
+            ),
+        }
+
+    # simulated objectives: sweep the placement of the hidden stack
+    import dataclasses
+
+    from repro.runtime.engine import (plan_step, simulate_pipelined,
+                                      simulate_serial)
+    from repro.runtime.links import LinkModel
+
+    if batch_size % microbatches:
+        raise ValueError(
+            f"batch {batch_size} not divisible by microbatches={microbatches}")
+    stack = (*cfg.tower_hidden, *cfg.server_hidden)
+    link = LinkModel.uniform(
+        cfg.num_clients, latency_s=latency_s,
+        bandwidth_bps=bandwidth_bytes_per_s,
+        client_flops_per_s=client_flops_per_s,
+        server_flops_per_s=server_flops_per_s,
     )
+    times: dict[int, float] = {}
+    for depth in range(min_private_layers, len(stack) + 1):
+        cand = dataclasses.replace(
+            cfg, tower_hidden=stack[:depth], server_hidden=stack[depth:])
+        plan = plan_step(cand, batch_size, microbatches)
+        if objective == "serial":
+            times[depth] = simulate_serial(plan, link).step_time_s
+        else:
+            times[depth] = simulate_pipelined(plan, link).step_time_s
+    recommended = min(times, key=lambda d: (times[d], d))
     return {
-        "comm_bound": bool(comm_bound),
-        "comm_s_per_batch": comm_s,
-        "client_s_per_batch": t_client,
-        "server_s_per_batch": t_server,
+        "objective": objective,
         "recommended_tower_layers": recommended,
+        "step_time_s_by_depth": times,
         "rationale": (
-            "communication-bound: move layers into the clients so the cut "
-            "stays small" if comm_bound else
-            "compute-bound: keep towers at the privacy-minimum and put the "
-            "core on the role-0 worker"
+            f"{objective} clock argmin over placements of the "
+            f"{len(stack)}-layer hidden stack (M={microbatches})"
         ),
     }
 
@@ -116,6 +186,7 @@ def epoch_traffic(
     num_samples: int,
     batch_size: int,
     bytes_per_float: int = 4,
+    aux_loss: bool = False,
 ) -> dict[str, RoleTraffic]:
     """Per-epoch traffic by role, following the paper's §4.4 accounting.
 
@@ -128,11 +199,15 @@ def epoch_traffic(
       * every feature-holder sends its cut activation (B x cut_dim) to role 0
         and receives the matching jacobian back;
       * role 0 sends the head output (B x num_classes) to role 3 for the loss
-        and receives the head jacobian back.
+        and receives the head jacobian back;
+      * with ``aux_loss``, role 0 additionally ships one f32 auxiliary-loss
+        scalar per batch to role 3 (the protocol's ``aux_loss`` slot, e.g.
+        the moe router load-balance term).
     """
     num_batches = num_samples // batch_size
     cut = batch_size * cfg.cut_dim * bytes_per_float
     head = batch_size * cfg.num_classes * bytes_per_float
+    aux = aux_exchange_bytes(1) if aux_loss else 0
 
     role1 = RoleTraffic(
         sent_bytes=cut * num_batches, received_bytes=cut * num_batches
@@ -140,12 +215,13 @@ def epoch_traffic(
     # role 3 = one feature-holder + the loss exchange
     role3 = RoleTraffic(
         sent_bytes=(cut + head) * num_batches,
-        received_bytes=(cut + head) * num_batches,
+        received_bytes=(cut + head + aux) * num_batches,
     )
-    # role 0 receives K cut tensors + 1 head jacobian; sends K jacobians + head
+    # role 0 receives K cut tensors + 1 head jacobian; sends K jacobians +
+    # the head output (+ the aux scalar when the family carries one)
     k = cfg.num_clients
     role0 = RoleTraffic(
-        sent_bytes=(cut * k + head) * num_batches,
+        sent_bytes=(cut * k + head + aux) * num_batches,
         received_bytes=(cut * k + head) * num_batches,
     )
     return {"role1": role1, "role3": role3, "role0": role0}

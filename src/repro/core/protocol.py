@@ -78,18 +78,27 @@ class MessageSpec:
     sender: str
     receiver: str
     tag: str
-    kind: str  # "cut" | "head_out" | "head_jac" | "jac"
+    kind: str  # "cut" | "head_out" | "aux" | "head_jac" | "jac"
     client: Optional[int] = None
 
 
 @dataclass(frozen=True)
 class StepSchedule:
-    """The per-step message schedule: K cut uplinks, the head/loss exchange,
-    K jacobian downlinks.  Serial execution walks it in order; the pipelined
-    runtime issues the same messages per microbatch, overlapped."""
+    """The per-step message schedule: K cut uplinks, the head/loss exchange
+    (with its auxiliary-loss slot), K jacobian downlinks.  Serial execution
+    walks it in order; the pipelined runtime issues the same messages per
+    microbatch, overlapped.
+
+    ``aux`` is the role-0 -> role-3 auxiliary-loss slot: families whose
+    server network computes a loss term of its own (the moe router
+    load-balance loss) ship that scalar alongside the head output so role 3
+    folds it into the training loss.  The slot is always part of the
+    schedule definition; a message is only recorded (and costed) when the
+    family's SplitProgram declares an aux term."""
 
     cuts: tuple[MessageSpec, ...]
     head_out: MessageSpec
+    aux: MessageSpec
     head_jac: MessageSpec
     jacs: tuple[MessageSpec, ...]
 
@@ -106,30 +115,39 @@ def step_schedule(num_clients: int, label_holder: int = 0) -> StepSchedule:
     return StepSchedule(
         cuts=cuts,
         head_out=MessageSpec("role0", "role3", "head_output", "head_out"),
+        aux=MessageSpec("role0", "role3", "aux_loss", "aux"),
         head_jac=MessageSpec("role3", "role0", "head_jacobian", "head_jac"),
         jacs=jacs,
     )
 
 
 def protocol_step(
-    tower_fwd: Callable,  # (tower_params_k, x_k) -> cut activation
-    server_fwd: Callable,  # (server_params, merged) -> logits
+    tower_fwd,  # (tower_params_k, x_k) -> cut; or a per-client list of K
+    server_fwd: Callable,  # (server_params, merged[, batch]) -> logits[, aux]
     loss_fn: Callable,  # (logits, labels) -> scalar
     tower_params: list,
     server_params,
     features: list[jnp.ndarray],  # per-client feature slices
-    labels: jnp.ndarray,
+    labels,  # role-3 context: an array or a pytree, batch-major
     merge: str,
     *,
     label_holder: int = 0,
     live_mask: Optional[jnp.ndarray] = None,
     ledger: Optional[Ledger] = None,
+    server_takes_batch: bool = False,
+    server_aux: bool = False,
+    merge_fn: Optional[Callable] = None,
 ):
     """One paper-protocol training step; returns (loss, tower_grads, server_grads).
 
     The message schedule follows paper §4.4: feature-holders send cut
-    activations to role 0; role 0 sends the head output to role 3; role 3
-    returns the head jacobian; role 0 returns per-client cut jacobians.
+    activations to role 0; role 0 sends the head output (plus, for
+    families with a server-side auxiliary loss, the ``aux_loss`` scalar —
+    ``server_aux``) to role 3; role 3 returns the head jacobian; role 0
+    returns per-client cut jacobians.  ``tower_fwd`` may be a list of
+    per-client callables (modality splits) and ``merge_fn`` replaces the
+    uniform stacked merge for programs with non-uniform cuts (the vlm
+    sequence concatenation) — see repro.models.split_program.
 
     Thin wrapper: the numerics live in
     :class:`repro.runtime.executor.Executor` (serial mode, one microbatch,
@@ -143,11 +161,15 @@ def protocol_step(
     from repro.transport.base import SimTransport, TowerWorker
 
     K = len(tower_params)
-    workers = [TowerWorker(k, tower_fwd, tower_params[k]) for k in range(K)]
+    tower_fwds = (list(tower_fwd) if isinstance(tower_fwd, (list, tuple))
+                  else [tower_fwd] * K)
+    workers = [TowerWorker(k, tower_fwds[k], tower_params[k])
+               for k in range(K)]
     executor = Executor(
         SimTransport(workers), server_fwd, loss_fn, merge,
         mode="serial", microbatches=1, label_holder=label_holder,
-        drop_policy="neutral",
+        drop_policy="neutral", server_takes_batch=server_takes_batch,
+        server_aux=server_aux, merge_fn=merge_fn,
     )
     res = executor.run_step(
         server_params, labels, features=list(features),

@@ -34,6 +34,15 @@ Examples:
   PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \\
       --steps 20 --transport inproc --runtime nowait --microbatches 4 \\
       --straggler 1
+
+  # split execution is family-agnostic (repro.models.split_program): moe
+  # ships its router aux loss through the protocol's role-0 -> role-3 aux
+  # slot, audio trains mel-band encoder towers, vlm by-source modality
+  # towers — any vertical config over any transport:
+  PYTHONPATH=src python -m repro.launch.train --arch deepseek-moe-16b \\
+      --reduced --steps 5 --batch 4 --seq 64 --transport inproc
+  PYTHONPATH=src python -m repro.launch.train --arch whisper-tiny \\
+      --reduced --steps 5 --batch 4 --seq 64 --transport multiproc
 """
 from __future__ import annotations
 
@@ -169,13 +178,12 @@ def main(argv=None):
             "arch without one)"
         )
     if args.transport != "sim":
-        from repro.models.backbone import SPLIT_EXEC_FAMILIES
+        # every family has a registered SplitProgram — this only rejects a
+        # config with no vertical section (checked above) or an unknown
+        # family string
+        from repro.models.split_program import get_program
 
-        if cfg.family not in SPLIT_EXEC_FAMILIES:
-            raise SystemExit(
-                f"--transport {args.transport} (split execution) covers "
-                f"families {SPLIT_EXEC_FAMILIES}; {cfg.name} is "
-                f"{cfg.family!r}")
+        get_program(cfg)
         if args.checkpoint:
             raise SystemExit("--checkpoint is not supported with split "
                              "execution (tower params live at the clients)")

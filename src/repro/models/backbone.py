@@ -380,18 +380,26 @@ def encode_audio(params, frames, cfg: ArchConfig, *, live_mask=None,
     if cfg.vertical is not None:
         h = _towers_forward(params, h, cfg, positions=enc_positions,
                             live_mask=live_mask, causal=False, remat=remat)
+    return _audio_encoder_tail(params, h, cfg, dims, remat=remat)
+
+
+def _audio_encoder_tail(params, h, cfg: ArchConfig, dims: BlockDims, *,
+                        remat=False):
+    """Post-merge encoder layers + final encoder norm.  Shared by the
+    monolithic ``encode_audio`` and the split-execution ``server_fwd`` (the
+    merged cut activation enters here) so the two can never diverge."""
+    enc_positions = jnp.arange(h.shape[1], dtype=jnp.int32)
     if params["encoder"] is not None:
         h = tfm.dense_stack_apply(params["encoder"], h, dims, causal=False,
                                   positions=enc_positions, remat=remat)
     return tfm._norm(params["enc_final_norm"], h, dims.norm, dims.norm_eps)
 
 
-def _forward_audio(params, batch, cfg: ArchConfig, dims: BlockDims, live_mask,
-                   remat=False):
-    tokens = batch["tokens"]
-    B, S = tokens.shape
-    enc_out = encode_audio(params, batch["frames"], cfg, live_mask=live_mask,
-                           remat=remat)
+def _audio_decoder_apply(params, tokens, enc_out, cfg: ArchConfig,
+                         dims: BlockDims, *, remat=False):
+    """Teacher-forced decoder over ``enc_out`` -> logits.  Shared by the
+    monolithic ``_forward_audio`` and the split-execution ``server_fwd``."""
+    S = tokens.shape[1]
     S_enc = enc_out.shape[1]
     enc_positions = jnp.arange(S_enc, dtype=jnp.int32)
 
@@ -410,7 +418,16 @@ def _forward_audio(params, batch, cfg: ArchConfig, dims: BlockDims, live_mask,
     body = tfm._maybe_checkpoint(body, remat)
     x, _ = jax.lax.scan(body, x, params["decoder"])
     x = tfm._norm(params["final_norm"], x, dims.norm, dims.norm_eps)
-    return layers.unembed(params["embed"], x), jnp.zeros((), jnp.float32)
+    return layers.unembed(params["embed"], x)
+
+
+def _forward_audio(params, batch, cfg: ArchConfig, dims: BlockDims, live_mask,
+                   remat=False):
+    enc_out = encode_audio(params, batch["frames"], cfg, live_mask=live_mask,
+                           remat=remat)
+    logits = _audio_decoder_apply(params, batch["tokens"], enc_out, cfg, dims,
+                                  remat=remat)
+    return logits, jnp.zeros((), jnp.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -789,89 +806,43 @@ def make_serve_step(cfg: ArchConfig, *, window=None, ring=False,
 
 # ---------------------------------------------------------------------------
 # split execution: per-role params + pure tower/server callables
+#
+# The real implementation is the per-family ``SplitProgram`` registry in
+# repro.models.split_program (every family — dense, ssm, hybrid, moe,
+# audio, vlm — trains genuinely split).  The helpers below are thin
+# compatibility wrappers over the token-LM programs.
 # ---------------------------------------------------------------------------
-
-SPLIT_EXEC_FAMILIES = ("dense", "ssm", "hybrid")
-
-
-def _check_split_exec(cfg: ArchConfig) -> None:
-    if cfg.vertical is None:
-        raise ValueError(f"{cfg.name}: split execution needs a vertical config")
-    if cfg.family not in SPLIT_EXEC_FAMILIES:
-        raise NotImplementedError(
-            f"split execution covers the token-LM families "
-            f"{SPLIT_EXEC_FAMILIES}; {cfg.name} is {cfg.family!r} "
-            "(moe carries a router aux loss outside the protocol's "
-            "loss exchange; audio/vlm towers are modality-shaped)")
-
 
 def split_lm_params(cfg: ArchConfig, params) -> tuple[list, dict]:
     """Partition a monolithic ``init_params`` tree into per-role trees.
 
-    Client k gets its tower stack PLUS its vertical slice of the embedding
-    table — columns [k*d/K, (k+1)*d/K) are all it needs to embed its own
-    token stream, the true by-feature partition of the input layer.  The
-    role-0 server keeps everything else (server trunk, final norm, and the
-    full table for the unembed head; in split execution the input-embedding
-    columns train at the clients while the head trains at the server).
+    Thin wrapper over ``split_program.get_program(cfg).partition`` — client
+    k gets its tower stack plus its private input slice (for token LMs: the
+    embedding-table columns [k*d/K, (k+1)*d/K)); the role-0 server keeps
+    everything else.
     """
-    _check_split_exec(cfg)
-    K = cfg.vertical.num_clients
-    ds = cfg.d_model // K
-    table = params["embed"]["table"]
-    towers = []
-    for k in range(K):
-        tp = dict(jax.tree_util.tree_map(lambda a: a[k], params["towers"]))
-        tp["embed_slice"] = table[:, k * ds:(k + 1) * ds]
-        towers.append(tp)
-    server = {key: val for key, val in params.items() if key != "towers"}
-    return towers, server
+    from repro.models.split_program import get_program
+
+    return get_program(cfg).partition(params)
 
 
 def make_split_lm_fns(cfg: ArchConfig):
     """(tower_fwd, server_fwd, loss_fn) pure callables for the Executor.
 
-    The protocol "features" are the raw token ids (every client holds the
-    shared stream; its PRIVATE dimension is the embedding-table slice), so
-    ``protocol_step(tower_fwd, server_fwd, loss_fn, towers, server,
-    [tokens]*K, labels, merge)`` is the serial reference the transports
-    must match — asserted at step 0 of ``train.loop.train_split`` and in
-    tests/test_transport.py.
+    Thin wrapper over the token-LM ``SplitProgram``; kept for callers that
+    predate the per-family registry.  Families whose programs need
+    per-client tower callables or an aux-loss slot (vlm, moe) should use
+    ``split_program.get_program`` directly.
     """
-    _check_split_exec(cfg)
-    v = cfg.vertical
-    dims = BlockDims.from_arch(cfg)
-    if cfg.family in ("ssm", "hybrid"):
-        dims_t = None
-    else:
-        dims_t = _tower_dims(cfg)
+    from repro.models.split_program import get_program
 
-    def tower_fwd(tp, tokens):
-        x = jnp.take(tp["embed_slice"], tokens, axis=0)  # (B, S, d/K)
-        positions = jnp.arange(tokens.shape[-1], dtype=jnp.int32)
-        h = x @ tp["proj_in"]
-        if cfg.family in ("ssm", "hybrid"):
-            h = tfm.mamba_stack_apply(tp["blocks"], h, cfg.ssm,
-                                      tp["proj_in"].shape[1], cfg.norm_eps)
-        else:
-            h = tfm.dense_stack_apply(tp["blocks"], h, dims_t, causal=True,
-                                      positions=positions)
-        cut = h @ tp["proj_out"]
-        if v.compression is not None:
-            cut = comp_lib.apply_compression(
-                cut[None], v.compression, v.topk_fraction)[0]
-        return cut
-
-    def server_fwd(sp, merged):
-        positions = jnp.arange(merged.shape[1], dtype=jnp.int32)
-        x, _ = _server_trunk_apply(sp, merged, cfg, dims, positions=positions)
-        x = tfm._norm(sp["final_norm"], x, dims.norm, dims.norm_eps)
-        return layers.unembed(sp["embed"], x)
-
-    def loss_fn(logits, labels):
-        return lm_loss(logits, labels)
-
-    return tower_fwd, server_fwd, loss_fn
+    program = get_program(cfg)
+    if program.per_client_towers or program.has_aux:
+        raise ValueError(
+            f"{cfg.name} ({cfg.family}) needs the full SplitProgram "
+            "interface (per-client towers / aux-loss slot); use "
+            "repro.models.split_program.get_program")
+    return program.tower_fwd(0), program.server_fwd, program.loss_fn
 
 
 # ---------------------------------------------------------------------------

@@ -94,21 +94,45 @@ class ExecutionResult:
     ledger: Ledger
     report: object  # SimReport (simulated liveness) or ExecReport (measured)
     ema_state: Optional[dict]
+    # mean server-side auxiliary loss shipped role 0 -> role 3 (families
+    # with server_aux, e.g. the moe router load-balance term); None otherwise
+    aux: Optional[jnp.ndarray] = None
 
 
 class Executor:
-    """Role-0 server driving one training step per :meth:`run_step` call."""
+    """Role-0 server driving one training step per :meth:`run_step` call.
+
+    The family-specific pieces come in as pure callables (usually from a
+    :class:`~repro.models.split_program.SplitProgram`):
+
+    * ``server_fwd(server_params, merged)`` — or ``(server_params, merged,
+      batch)`` with ``server_takes_batch`` (e.g. the audio decoder's
+      teacher-forcing tokens ride the role-0 batch context);
+    * ``server_aux`` — ``server_fwd`` returns ``(logits, aux)`` and the aux
+      scalar is folded into the loss AND recorded on the schedule's
+      role-0 -> role-3 ``aux_loss`` slot;
+    * ``merge_fn(cuts_list, live_mask)`` — replaces the uniform stacked
+      merge for programs whose cuts differ in shape per client (the vlm
+      sequence concatenation); requires a barrier mode (no EMA imputation
+      of a non-uniform stack).
+    """
 
     def __init__(self, transport, server_fwd: Callable, loss_fn: Callable,
                  merge: str, *, mode: str = "pipelined", microbatches: int = 1,
                  label_holder: int = 0, drop_policy: Optional[str] = None,
-                 ema_decay: float = 0.95, deadline=None):
+                 ema_decay: float = 0.95, deadline=None,
+                 server_takes_batch: bool = False, server_aux: bool = False,
+                 merge_fn: Optional[Callable] = None):
         if mode not in ("serial", "pipelined", "nowait"):
             raise ValueError(f"mode must be serial|pipelined|nowait, got {mode!r}")
         if drop_policy is None:
             drop_policy = "impute" if mode == "nowait" else "fused"
         if drop_policy not in DROP_POLICIES:
             raise ValueError(f"drop_policy must be one of {DROP_POLICIES}")
+        if merge_fn is not None and drop_policy == "impute":
+            raise ValueError(
+                "program merge_fn (non-uniform cuts) cannot EMA-impute "
+                "missing clients; use a barrier mode (serial/pipelined)")
         self.transport = transport
         self.server_fwd = server_fwd
         self.loss_fn = loss_fn
@@ -118,6 +142,9 @@ class Executor:
         self.label_holder = label_holder
         self.drop_policy = drop_policy
         self.ema_decay = ema_decay
+        self.server_takes_batch = server_takes_batch
+        self.server_aux = server_aux
+        self.merge_fn = merge_fn
         # deadline: None -> bootstrap an AdaptiveDeadline from the first
         # full barrier; float -> static window; AdaptiveDeadline -> as given
         if deadline is None:
@@ -141,14 +168,17 @@ class Executor:
 
         ``features`` (per-client arrays, batch-major) are shipped in the
         forward requests; omit them when workers own a ``feature_fn``.
-        ``liveness`` is an (M, K) 0/1 matrix from a simulated clock; without
-        it, ``"nowait"`` measures liveness against wall-clock deadlines and
-        other modes barrier on all K cuts.  A ``report`` passed in (the
-        simulated clock's) is returned untouched; otherwise a measured
+        ``labels`` is the role-0/3-side per-step context — a plain label
+        array or any batch-major pytree (a SplitProgram's ``batch_ctx``);
+        microbatch slicing maps over its leaves.  ``liveness`` is an (M, K)
+        0/1 matrix from a simulated clock; without it, ``"nowait"``
+        measures liveness against wall-clock deadlines and other modes
+        barrier on all K cuts.  A ``report`` passed in (the simulated
+        clock's) is returned untouched; otherwise a measured
         :class:`ExecReport` is built.
         """
         transport, K, M = self.transport, self.transport.num_clients, self.microbatches
-        B = labels.shape[0]
+        B = jax.tree_util.tree_leaves(labels)[0].shape[0]
         if B % M:
             raise ValueError(f"batch {B} not divisible by microbatches={M}")
         mbsz = B // M
@@ -170,7 +200,7 @@ class Executor:
         first_t: dict[int, float] = {}
         step_done = [False] * K
         final_grads: list = [None] * K
-        losses, server_grad_acc, live_matrix = [], [], []
+        losses, aux_acc, server_grad_acc, live_matrix = [], [], [], []
         misses = [0] * K
         last_deadline: Optional[float] = self.static_deadline_s
 
@@ -210,39 +240,68 @@ class Executor:
             live_matrix.append(live_row)
 
             arrived = cuts_buf.pop(m, {})
-            proto = next(iter(arrived.values()))
-            stacked = jnp.stack([
-                arrived.get(k, jnp.zeros_like(proto)) for k in range(K)
-            ])
-            if self.drop_policy == "impute" and ema_state is None:
-                ema_state = {
-                    "ema": jnp.zeros((K, stacked.shape[-1]), jnp.float32),
-                    "initialized": jnp.zeros((K,), jnp.float32),
-                }
+            if self.merge_fn is not None:
+                # non-uniform program merge (e.g. vlm sequence concat):
+                # cuts differ in shape per client, so there is no stack to
+                # zero-fill — barrier modes guarantee every cut arrived
+                if len(arrived) < K:
+                    raise RuntimeError(
+                        f"program merge needs every cut; microbatch {m} is "
+                        f"missing clients "
+                        f"{sorted(set(range(K)) - set(arrived))}")
+                cuts_in = [arrived[k] for k in range(K)]
+                probe = cuts_in[0]
+            else:
+                proto = next(iter(arrived.values()))
+                cuts_in = jnp.stack([
+                    arrived.get(k, jnp.zeros_like(proto)) for k in range(K)
+                ])
+                probe = cuts_in[0]
+                if self.drop_policy == "impute" and ema_state is None:
+                    ema_state = {
+                        "ema": jnp.zeros((K, cuts_in.shape[-1]), jnp.float32),
+                        "initialized": jnp.zeros((K,), jnp.float32),
+                    }
 
-            labels_m = labels[m * mbsz:(m + 1) * mbsz]
+            labels_m = jax.tree_util.tree_map(
+                lambda a: a[m * mbsz:(m + 1) * mbsz], labels)
             live_vec = jnp.asarray(live_row, jnp.float32)
 
-            def server_loss(server_p, stacked_cuts):
-                if self.drop_policy == "impute":
+            def server_loss(server_p, cuts):
+                if self.merge_fn is not None:
+                    new_ema = ema_state
+                    mask = merge_mask if self.drop_policy == "neutral" else None
+                    merged = self.merge_fn(cuts, mask)
+                elif self.drop_policy == "impute":
                     imputed, new_ema = straggler_lib.impute_stack(
-                        stacked_cuts, live_vec, ema_state,
-                        decay=self.ema_decay)
+                        cuts, live_vec, ema_state, decay=self.ema_decay)
                     merged = fast_merge(imputed, self.merge)
                 elif self.drop_policy == "neutral":
                     new_ema = ema_state
                     merged = merge_lib.merge_stacked(
-                        stacked_cuts, self.merge, live_mask=merge_mask)
+                        cuts, self.merge, live_mask=merge_mask)
                 else:
                     new_ema = ema_state
-                    merged = fast_merge(stacked_cuts, self.merge)
-                logits = self.server_fwd(server_p, merged)
-                return self.loss_fn(logits, labels_m), (logits, new_ema)
+                    merged = fast_merge(cuts, self.merge)
+                if self.server_takes_batch:
+                    out = self.server_fwd(server_p, merged, labels_m)
+                else:
+                    out = self.server_fwd(server_p, merged)
+                if self.server_aux:
+                    logits, aux = out
+                else:
+                    logits, aux = out, jnp.zeros((), jnp.float32)
+                loss = self.loss_fn(logits, labels_m) + aux
+                return loss, (logits, aux, new_ema)
 
-            (loss_m, (logits, ema_state)), (sg, cut_grads) = jax.value_and_grad(
-                server_loss, argnums=(0, 1), has_aux=True
-            )(server_params, stacked)
+            (loss_m, (logits, aux_m, ema_state)), (sg, cut_grads) = \
+                jax.value_and_grad(server_loss, argnums=(0, 1), has_aux=True
+                                   )(server_params, cuts_in)
             ledger.record_spec(schedule.head_out, logits)
+            if self.server_aux:
+                # the aux scalar rides the role-0 -> role-3 loss exchange
+                ledger.record_spec(schedule.aux, aux_m)
+                aux_acc.append(aux_m)
             ledger.record_spec(schedule.head_jac, logits)
 
             for spec in schedule.jacs:
@@ -268,14 +327,15 @@ class Executor:
                 raise RuntimeError("transport idle while awaiting step_done")
 
         loss = sum(losses) / M
+        aux = sum(aux_acc) / M if aux_acc else None
         server_grads = tree_mean(server_grad_acc)
         tower_grads = list(final_grads) if collect_grads else None
         if report is None:
             report = self._build_report(
                 time.monotonic() - t0, live_matrix, misses, ledger,
-                stacked, last_deadline)
+                cuts_in, last_deadline)
         return ExecutionResult(loss, tower_grads, server_grads, ledger,
-                               report, ema_state)
+                               report, ema_state, aux)
 
     # -- gathering ----------------------------------------------------------
 
@@ -334,10 +394,28 @@ class Executor:
         arrived = cuts_buf.get(m, {})
         return [1.0 if k in arrived else 0.0 for k in range(K)], deadline_used
 
-    def _build_report(self, elapsed_s, live_matrix, misses, ledger, stacked,
+    def _build_report(self, elapsed_s, live_matrix, misses, ledger, cuts,
                       deadline_s) -> ExecReport:
+        """``cuts`` is the last microbatch's cut set — a (K, ...) stack for
+        uniform merges, a per-client list for ``merge_fn`` programs."""
         K = self.transport.num_clients
-        per_mb_elements = int(stacked[0].size)
+        if self.merge_fn is not None:
+            # non-uniform program merge (e.g. vlm seq-concat): cuts differ
+            # in shape per client, so the per-client figures are means, and
+            # the collective model is the all-gather the program merge
+            # implies (the server needs every client's segment), not the
+            # reduction named by cfg.vertical.merge (which never executes)
+            per_mb_elements = int(round(
+                sum(int(c.size) for c in cuts) / K))
+            strategy = "concat"
+            cut_bytes = int(round(sum(
+                ledger.bytes_with_tag(f"cut[{k}]") for k in range(K)) / K))
+            itemsize = cuts[0].dtype.itemsize
+        else:
+            per_mb_elements = int(cuts[0].size)
+            strategy = self.merge
+            cut_bytes = ledger.bytes_with_tag("cut[0]")
+            itemsize = cuts.dtype.itemsize
         return ExecReport(
             mode=self.mode,
             transport=type(self.transport).__name__,
@@ -345,10 +423,9 @@ class Executor:
             microbatches=self.microbatches,
             live=live_matrix,
             misses_per_client=misses,
-            cut_bytes_per_client=ledger.bytes_with_tag("cut[0]"),
+            cut_bytes_per_client=cut_bytes,
             collective_bytes_per_client=self.microbatches
             * collective_bytes_per_merge(
-                self.merge, per_mb_elements, K,
-                stacked.dtype.itemsize),
+                strategy, per_mb_elements, K, itemsize),
             deadline_s=deadline_s,
         )

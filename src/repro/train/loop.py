@@ -4,8 +4,9 @@ Two drivers:
 
 * :func:`train` — the monolithic jitted step (centralized or vertical; the
   protocol is arithmetic-identical, paper §3), one host, fastest clock.
-* :func:`train_split` — SPLIT EXECUTION: the transformer LM trains through
-  the protocol for real — per-role workers behind a
+* :func:`train_split` — SPLIT EXECUTION: any family (dense/ssm/hybrid/moe/
+  audio/vlm — its :class:`~repro.models.split_program.SplitProgram`) trains
+  through the protocol for real — per-role workers behind a
   :class:`~repro.transport.Transport` (threads or processes), the
   :class:`~repro.runtime.executor.Executor` driving ``step_schedule`` at
   role 0, tower params updating locally at the clients, and (``--runtime
@@ -107,7 +108,7 @@ def _make_transport(cfg: ArchConfig, transport: str, *, seed, batch, seq,
                     microbatches, learning_rate, warmup, steps, grad_clip,
                     straggler: Optional[int], straggler_delay_s: float):
     from repro.transport import (InprocTransport, MultiprocTransport,
-                                 WorkerSpec, build_lm_worker)
+                                 WorkerSpec, build_split_worker)
 
     K = cfg.vertical.num_clients
     kwargs = dict(cfg=cfg, seed=seed, batch=batch, seq=seq,
@@ -118,28 +119,44 @@ def _make_transport(cfg: ArchConfig, transport: str, *, seed, batch, seq,
         return straggler_delay_s if k == straggler else 0.0
 
     if transport == "inproc":
-        workers = [build_lm_worker(k, forward_delay_s=delay(k), **kwargs)
+        workers = [build_split_worker(k, forward_delay_s=delay(k), **kwargs)
                    for k in range(K)]
         return InprocTransport(workers)
     if transport == "multiproc":
-        specs = [WorkerSpec(build_lm_worker,
+        specs = [WorkerSpec(build_split_worker,
                             dict(kwargs, forward_delay_s=delay(k)))
                  for k in range(K)]
         return MultiprocTransport(specs)
     raise ValueError(f"unknown split transport {transport!r}")
 
 
-def _verify_step0(res, tower_fwd, server_fwd, loss_fn, tower_params,
-                  server_params, tokens, labels, merge, atol, print_fn):
+def _verify_step0(res, program, tower_params, server_params, features, ctx,
+                  microbatches, atol, print_fn):
     """The acceptance identity: the transport's step-0 gradients must match
-    the serial ``protocol_step`` on the same decomposition."""
-    from repro.core.protocol import protocol_step
+    the serial ``protocol_step`` on the same program decomposition.
 
-    K = len(tower_params)
-    loss_ref, tg_ref, sg_ref, _ = protocol_step(
-        tower_fwd, server_fwd, loss_fn, tower_params, server_params,
-        [tokens] * K, labels, merge,
-    )
+    The reference is the mean of M per-microbatch serial steps — exactly
+    what the Executor computes.  For batch-linear losses that equals the
+    full-batch serial step; families with per-merge statistics (the moe
+    router density/capacity behind the aux loss) are only equivalent at
+    matching microbatch boundaries, so the reference must slice the same
+    way the pipeline does."""
+    M = microbatches
+    B = jax.tree_util.tree_leaves(ctx)[0].shape[0]
+    mbsz = B // M
+    losses, tgs, sgs = [], [], []
+    for m in range(M):
+        sl = slice(m * mbsz, (m + 1) * mbsz)
+        feats_m = [f[sl] for f in features]
+        ctx_m = jax.tree_util.tree_map(lambda a: a[sl], ctx)
+        loss_m, tg_m, sg_m, _ = program.protocol_step(
+            tower_params, server_params, feats_m, ctx_m)
+        losses.append(loss_m)
+        tgs.append(tg_m)
+        sgs.append(sg_m)
+    loss_ref = sum(losses) / M
+    tg_ref = jax.tree_util.tree_map(lambda *x: sum(x) / M, *tgs)
+    sg_ref = jax.tree_util.tree_map(lambda *x: sum(x) / M, *sgs)
     got = jax.tree_util.tree_leaves((res.tower_grads, res.server_grads))
     want = jax.tree_util.tree_leaves((tg_ref, sg_ref))
     max_dev = max(
@@ -176,17 +193,23 @@ def train_split(
     verify_atol: float = 1e-5,
     print_fn: Callable = print,
 ):
-    """Train the vertically-split LM through the Executor over a real
+    """Train any vertically-split family through the Executor over a real
     transport.  Returns ({"towers": [...], "server": ...}, metrics, report).
 
-    The driver is the role-0 server: it owns the server trunk + unembed
-    head and the labels; each feature holder owns its tower and
-    embedding-table slice and regenerates its token stream from the shared
-    seed (see ``repro.transport.builders.build_lm_worker``).  ``runtime``
+    The decomposition comes from ``cfg``'s registered
+    :class:`~repro.models.split_program.SplitProgram`: the driver is the
+    role-0 server (server partition + the per-step batch context — labels,
+    and for audio the decoder's teacher-forcing tokens); each feature
+    holder owns its tower partition and regenerates its feature stream
+    (tokens / mel-band frame slices / modality inputs) from the shared seed
+    (see ``repro.transport.builders.build_split_worker``).  ``runtime``
     selects the schedule: ``serial`` (M=1 barrier), ``pipelined``
     (microbatched, staleness 0) or ``nowait`` (adaptive deadlines + EMA
-    imputation in the real tower forward).
+    imputation in the real tower forward).  Families with a server-side
+    auxiliary loss (moe) ship it role 0 -> role 3 through the protocol's
+    ``aux_loss`` slot, audited in the ledger.
     """
+    from repro.models.split_program import get_program
     from repro.runtime.executor import Executor
 
     if cfg.vertical is None:
@@ -194,9 +217,9 @@ def train_split(
     mode = "serial" if runtime == "serial" else runtime
     M = 1 if runtime == "serial" else microbatches
 
-    tower_fwd, server_fwd, loss_fn = backbone.make_split_lm_fns(cfg)
+    program = get_program(cfg)
     params = backbone.init_params(cfg, jax.random.PRNGKey(seed))
-    tower_params, server_params = backbone.split_lm_params(cfg, params)
+    tower_params, server_params = program.partition(params)
 
     opt = AdamW(
         learning_rate=linear_warmup_cosine(learning_rate, warmup, steps),
@@ -210,21 +233,23 @@ def train_split(
         grad_clip=grad_clip, straggler=straggler,
         straggler_delay_s=straggler_delay_s,
     )
-    executor = Executor(tr, server_fwd, loss_fn, cfg.vertical.merge,
-                        mode=mode, microbatches=M)
-
     metrics = TrainMetrics()
     report = None
     ema_state = None
     it = iter(loader)
     try:
+        # inside the try: Executor.__init__ validates program/runtime
+        # compatibility (e.g. a merge_fn program cannot EMA-impute) and the
+        # spawned workers must not leak when it raises
+        executor = Executor(tr, program.server_fwd, program.loss_fn,
+                            program.merge, mode=mode, microbatches=M,
+                            **program.executor_kwargs)
         for step in range(steps):
             b = next(it)
-            tokens = jnp.asarray(b["tokens"])
-            labels = jnp.asarray(b["labels"])
+            ctx = program.batch_ctx(b)
             t0 = time.time()
             res = executor.run_step(
-                server_params, labels, step=step, ema_state=ema_state,
+                server_params, ctx, step=step, ema_state=ema_state,
                 collect_grads=(step == 0 and verify_step0),
             )
             if step == 0 and verify_step0:
@@ -237,10 +262,14 @@ def train_split(
                              "miss(es) — gradients are intentionally "
                              "imputed, not serial")
                 else:
-                    _verify_step0(res, tower_fwd, server_fwd, loss_fn,
-                                  tower_params, server_params, tokens,
-                                  labels, cfg.vertical.merge, verify_atol,
+                    _verify_step0(res, program, tower_params, server_params,
+                                  program.features(b), ctx, M, verify_atol,
                                   print_fn)
+                if program.has_aux:
+                    aux_bytes = res.ledger.bytes_with_tag("aux_loss")
+                    print_fn(f"router aux loss {float(res.aux):.6f} "
+                             "transported role0 -> role3 through the "
+                             f"protocol aux slot ({aux_bytes} B in ledger)")
             server_params, opt_state = opt.update(
                 server_params, res.server_grads, opt_state)
             ema_state = res.ema_state
@@ -252,6 +281,8 @@ def train_split(
                 miss = res.report.total_misses if res.report else 0
                 print_fn(f"step {step:5d}  loss {loss:8.4f}  {dt*1e3:8.1f} ms"
                          f"  [{transport}/{mode}"
+                         + (f" aux={float(res.aux):.4f}"
+                            if res.aux is not None else "")
                          + (f" misses={miss}" if mode == "nowait" else "")
                          + "]")
         final_towers = _collect_tower_params(tr)

@@ -40,7 +40,8 @@ Worker protocol (requests handled by :class:`TowerWorker`):
 * ``shutdown {}``                         -> ``bye {}``
 """
 from repro.transport.base import SimTransport, TowerWorker, Transport
-from repro.transport.builders import build_lm_worker, build_mlp_worker
+from repro.transport.builders import (build_lm_worker, build_mlp_worker,
+                                      build_split_worker)
 from repro.transport.inproc import InprocTransport
 from repro.transport.multiproc import MultiprocTransport, WorkerSpec
 
@@ -54,6 +55,7 @@ __all__ = [
     "InprocTransport",
     "MultiprocTransport",
     "WorkerSpec",
+    "build_split_worker",
     "build_lm_worker",
     "build_mlp_worker",
 ]

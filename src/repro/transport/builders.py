@@ -58,28 +58,33 @@ def build_mlp_worker(client_id: int, *, cfg, param_seed: int = 0,
     )
 
 
-def build_lm_worker(client_id: int, *, cfg, seed: int = 0, batch: int = 8,
-                    seq: int = 256, microbatches: int = 1,
-                    learning_rate: Optional[float] = None, warmup: int = 20,
-                    steps: int = 100, grad_clip: float = 1.0,
-                    forward_delay_s: float = 0.0) -> TowerWorker:
-    """Vertically-split LM feature holder.
+def build_split_worker(client_id: int, *, cfg, seed: int = 0, batch: int = 8,
+                       seq: int = 256, microbatches: int = 1,
+                       learning_rate: Optional[float] = None, warmup: int = 20,
+                       steps: int = 100, grad_clip: float = 1.0,
+                       forward_delay_s: float = 0.0) -> TowerWorker:
+    """Family-agnostic vertically-split feature holder.
+
+    The per-family decomposition — tower callable, parameter partition,
+    feature source — comes from ``cfg``'s registered
+    :class:`~repro.models.split_program.SplitProgram`, so this one builder
+    serves every family: token LMs regenerate the shared token stream,
+    audio workers their mel-band frame slices, vlm workers their modality
+    (patches / tokens) — all from the shared ``LMBatchLoader`` seed, so
+    nothing but protocol messages ever crosses the transport.
 
     Reconstructs the full seeded init (cheap at these scales) and keeps
-    client ``client_id``'s tower + embedding-table slice; regenerates the
-    shared token stream from the same ``LMBatchLoader`` seed as the driver
-    and serves per-microbatch slices.  With ``learning_rate`` set, tower
-    params train locally under the same AdamW schedule as the server —
-    they never leave this process.
+    only client ``client_id``'s tower partition.  With ``learning_rate``
+    set, tower params train locally under the same AdamW schedule as the
+    server — they never leave this process.
     """
-    from repro.data.loader import LMBatchLoader
-    from repro.models import backbone
+    from repro.models import backbone, split_program
     from repro.optim import AdamW
     from repro.optim.schedules import linear_warmup_cosine
 
+    program = split_program.get_program(cfg)
     params = backbone.init_params(cfg, jax.random.PRNGKey(seed))
-    towers_list, _ = backbone.split_lm_params(cfg, params)
-    tower_fwd, _, _ = backbone.make_split_lm_fns(cfg)
+    towers_list, _ = program.partition(params)
 
     optimizer = None
     if learning_rate:
@@ -88,18 +93,14 @@ def build_lm_worker(client_id: int, *, cfg, seed: int = 0, batch: int = 8,
             weight_decay=0.1, grad_clip_norm=grad_clip,
         )
 
-    loader_it = iter(LMBatchLoader(cfg, batch, seq, seed=seed))
-    state = {"step": -1, "tokens": None}
-    mbsz = batch // microbatches
-
-    def feature_fn(step: int, mb: int):
-        while state["step"] < step:  # steps arrive in order; advance lazily
-            state["tokens"] = jnp.asarray(next(loader_it)["tokens"])
-            state["step"] += 1
-        return state["tokens"][mb * mbsz:(mb + 1) * mbsz]
-
     return TowerWorker(
-        client_id, tower_fwd, towers_list[client_id],
-        feature_fn=feature_fn, optimizer=optimizer,
+        client_id, program.tower_fwd(client_id), towers_list[client_id],
+        feature_fn=program.feature_fn(client_id, batch=batch, seq=seq,
+                                      seed=seed, microbatches=microbatches),
+        optimizer=optimizer,
         forward_delay_s=forward_delay_s,
     )
+
+
+# back-compat alias: the LM worker is the token-LM program's split worker
+build_lm_worker = build_split_worker

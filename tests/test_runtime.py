@@ -232,3 +232,56 @@ def test_nowait_convergence_smoke():
     first = sum(losses[:5]) / 5
     last = sum(losses[-5:]) / 5
     assert last < first - 0.1, (first, last)
+
+
+# ---------------------------------------------------------------------------
+# runtime-aware placement: the advisor clocked on the pipelined schedule
+# ---------------------------------------------------------------------------
+
+def test_advise_split_depth_objectives_can_disagree():
+    """The serial clock pays every client tower one after another (depth is
+    K-times-expensive), while the pipelined clock runs towers in parallel
+    and serializes only the shared role-0 server — so the two objectives
+    legitimately pick different placements of the same hidden stack."""
+    from repro.configs.vertical_mlp import MLPSplitConfig
+    from repro.core.costs import advise_split_depth
+
+    cfg = MLPSplitConfig(
+        name="advisor_sweep", input_dim=32, num_classes=2, num_clients=4,
+        client_feature_sizes=(8, 8, 8, 8), tower_hidden=(512,), cut_dim=512,
+        server_hidden=(512, 512), merge="avg",
+    )
+    kw = dict(bandwidth_bytes_per_s=1e12, client_flops_per_s=1e9,
+              server_flops_per_s=1e9, batch_size=32, microbatches=4)
+    serial = advise_split_depth(cfg, objective="serial", **kw)
+    pipelined = advise_split_depth(cfg, objective="pipelined", **kw)
+
+    # serial: every tower layer is paid K times sequentially -> stay thin
+    assert serial["recommended_tower_layers"] == 1
+    # pipelined: parallel towers unload the serialized server -> go deeper
+    assert pipelined["recommended_tower_layers"] > 1
+    assert (serial["recommended_tower_layers"]
+            != pipelined["recommended_tower_layers"])
+    # both sweeps cover the same candidate placements of the 3-layer stack
+    assert (set(serial["step_time_s_by_depth"])
+            == set(pipelined["step_time_s_by_depth"]) == {1, 2, 3})
+    # the simulated objective really is the simulate_* clock
+    for r in (serial, pipelined):
+        d = r["recommended_tower_layers"]
+        assert r["step_time_s_by_depth"][d] == min(
+            r["step_time_s_by_depth"].values())
+
+
+def test_advise_split_depth_heuristic_unchanged():
+    """objective='heuristic' keeps the paper-§4.4 rule verbatim (the
+    comm-vs-compute binary), so existing guidance tests keep their
+    meaning."""
+    from repro.configs.vertical_mlp import BANK_MARKETING
+    from repro.core.costs import advise_split_depth
+
+    r = advise_split_depth(
+        BANK_MARKETING, bandwidth_bytes_per_s=1e4, client_flops_per_s=1e12,
+        server_flops_per_s=1e13,
+    )
+    assert r["objective"] == "heuristic"
+    assert r["comm_bound"] and r["recommended_tower_layers"] > 1
