@@ -207,6 +207,166 @@ def bench_split_exec(out: dict) -> None:
     out["split_exec"] = rows
 
 
+def bench_split_pipeline(out: dict, *, full: bool = False) -> None:
+    """Cross-step pipelined execution (repro.runtime.pipeline.StepPipeline):
+    measured multi-step wall-clock at window W=1 (the per-step barrier) vs
+    W=2 (step t+1 tower forwards overlapping step t's server backward +
+    jacobian drain), plus the discrete-event prediction for the same
+    schedule (``simulate_pipelined(steps, cross_step)``).
+
+    Two sections:
+
+    * per family — every registered SplitProgram over InprocTransport,
+      real reduced-config numerics; the overlap here is whatever genuine
+      thread parallelism the host gives tower forwards vs the role-0
+      backward.
+    * controlled — the paper-MLP program with KNOWN injected compute times
+      (client forward sleep + role-0 loss sleep), per transport.  Because
+      the compute times are known, the simulator's speedup prediction is
+      directly comparable to the measured one — the rows carry both plus
+      their ratio (the acceptance band is ~20%).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import get_arch
+    from repro.configs.vertical_mlp import MLPSplitConfig
+    from repro.core import split_model, towers
+    from repro.data.loader import LMBatchLoader
+    from repro.models import backbone, split_program
+    from repro.runtime import (LinkModel, StepPipeline, simulate_pipelined)
+    from repro.runtime.engine import StepPlan
+    from repro.runtime.executor import Executor
+    from repro.transport import (InprocTransport, MultiprocTransport,
+                                 TowerWorker, WorkerSpec, build_mlp_worker)
+
+    rows = []
+
+    def run_windowed(make_transport, make_executor, ctx_for, feats_for,
+                     server_p, window, steps):
+        """Drive ``steps`` training steps through StepPipeline(window) and
+        return the per-step wall-clock (warm step excluded)."""
+        tr = make_transport()
+        try:
+            executor = make_executor(tr)
+            executor.run_step(server_p, ctx_for(0), features=feats_for(0),
+                              collect_grads=False)  # warm / trace
+            pipeline = StepPipeline(executor, window=window)
+            t0 = time.time()
+            for step in range(1, steps + 1):
+                pipeline.submit(step, ctx_for(step),
+                                features=feats_for(step))
+                if pipeline.inflight >= window:
+                    pipeline.collect(server_p, collect_grads=False)
+            pipeline.flush(server_p, collect_grads=False)
+            return (time.time() - t0) / steps
+        finally:
+            tr.close()
+
+    # -- per family: real numerics over threads ------------------------------
+    fam_steps = 3
+    for arch in ("smollm-360m", "mamba2-1.3b", "zamba2-7b",
+                 "deepseek-moe-16b", "whisper-tiny", "internvl2-26b"):
+        cfg = get_arch(arch).reduced()
+        program = split_program.get_program(cfg)
+        params = backbone.init_params(cfg, jax.random.PRNGKey(0))
+        towers_p, server_p = program.partition(params)
+        b = {k: jnp.asarray(v) for k, v in
+             LMBatchLoader(cfg, 2, 16, seed=0).next_batch().items()}
+        feats, ctx = program.features(b), program.batch_ctx(b)
+
+        per_w = {}
+        for W in (1, 2):
+            dt = run_windowed(
+                lambda: InprocTransport(
+                    [TowerWorker(k, program.tower_fwd(k), towers_p[k])
+                     for k in range(program.num_clients)]),
+                lambda tr: Executor(tr, program.server_fwd, program.loss_fn,
+                                    program.merge, mode="pipelined",
+                                    microbatches=1,
+                                    **program.executor_kwargs),
+                lambda step: ctx, lambda step: feats,
+                server_p, W, fam_steps)
+            per_w[W] = dt
+            rows.append({
+                "section": "family", "family": cfg.family, "arch": cfg.name,
+                "transport": "inproc", "window": W,
+                "step_time_ms": dt * 1e3,
+                "speedup_vs_w1": per_w[1] / dt,
+            })
+            _emit(f"split_pipeline/{cfg.family}_w{W}", dt * 1e6,
+                  f"{per_w[1] / dt:.2f}x_vs_w1")
+
+    # -- controlled: known injected compute, per transport -------------------
+    fwd_delay, server_delay, ctl_steps = 0.06, 0.06, 4
+    K = 2
+    cfg = MLPSplitConfig(
+        name="pipeline_bench", input_dim=16 * K, num_classes=2,
+        num_clients=K, client_feature_sizes=(16,) * K, tower_hidden=(32,),
+        cut_dim=16, server_hidden=(32,), merge="avg",
+    )
+    params = split_model.init_split_mlp(jax.random.PRNGKey(0), cfg)
+    y = jax.random.randint(jax.random.PRNGKey(1), (8,), 0, cfg.num_classes)
+
+    def slow_loss(logits, labels):
+        time.sleep(server_delay)
+        return split_model.softmax_xent(logits, labels, cfg.num_classes)
+
+    worker_kwargs = dict(cfg=cfg, param_seed=0, data_seed=0, batch=8,
+                         microbatches=1, forward_delay_s=fwd_delay)
+    transports = {
+        "inproc": lambda: InprocTransport(
+            [build_mlp_worker(k, **worker_kwargs) for k in range(K)]),
+    }
+    if full:
+        transports["multiproc"] = lambda: MultiprocTransport(
+            [WorkerSpec(build_mlp_worker, dict(worker_kwargs))
+             for _ in range(K)])
+
+    # the simulator clocks the SAME schedule with the injected times as the
+    # compute model (rate 1.0 => flops are seconds); transfers are ~free on
+    # loopback so the link is wide and flat
+    plan = StepPlan(
+        num_clients=K, microbatches=1,
+        tower_fwd_flops=(fwd_delay,) * K, tower_bwd_flops=(0.003,) * K,
+        server_flops=server_delay, cut_bytes=8 * cfg.cut_dim * 4,
+        head_bytes=8 * cfg.num_classes * 4, merge="avg",
+        cut_elements=8 * cfg.cut_dim,
+    )
+    link = LinkModel.uniform(K, latency_s=2e-4, bandwidth_bps=1e9,
+                             client_flops_per_s=1.0, server_flops_per_s=1.0)
+    sim = {W: simulate_pipelined(plan, link, steps=ctl_steps,
+                                 cross_step=W).step_time_s
+           for W in (1, 2)}
+    predicted_speedup = sim[1] / sim[2]
+
+    for name, make in transports.items():
+        per_w = {}
+        for W in (1, 2):
+            dt = run_windowed(
+                make,
+                lambda tr: Executor(tr, towers.mlp_tower_apply, slow_loss,
+                                    cfg.merge, mode="pipelined",
+                                    microbatches=1),
+                lambda step: y, lambda step: None,
+                params["server"], W, ctl_steps)
+            per_w[W] = dt
+            rows.append({
+                "section": "controlled", "transport": name, "window": W,
+                "step_time_ms": dt * 1e3,
+                "speedup_vs_w1": per_w[1] / dt,
+                "sim_step_time_ms": sim[W] * 1e3,
+                "sim_speedup_vs_w1": sim[1] / sim[W],
+                "sim_over_measured": (sim[1] / sim[W]) / (per_w[1] / dt),
+            })
+            _emit(f"split_pipeline/controlled_{name}_w{W}", dt * 1e6,
+                  f"measured {per_w[1] / dt:.2f}x "
+                  f"sim {sim[1] / sim[W]:.2f}x")
+    out["split_pipeline"] = rows
+    print(f"split_pipeline: controlled W=2 predicted speedup "
+          f"{predicted_speedup:.2f}x")
+
+
 def run_paper_tables(steps: int, out: dict) -> None:
     from benchmarks import paper_tables as pt
 
@@ -228,6 +388,10 @@ def run_paper_tables(steps: int, out: dict) -> None:
     _emit("table6_compute", (time.time() - t0) * 1e6)
 
 
+SECTIONS = ("kernels", "runtime", "transport", "split_exec",
+            "split_pipeline", "tables")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
@@ -236,16 +400,40 @@ def main(argv=None) -> int:
     ap.add_argument("--roofline", nargs="*", default=None,
                     help="dry-run json files to fold into the roofline table")
     ap.add_argument("--json", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark sections to run "
+                         f"(of {', '.join(SECTIONS)}); default: all")
+    ap.add_argument("--bench-json", default="BENCH_split_exec.json",
+                    help="machine-readable split-execution perf artifact "
+                         "(per-family, per-transport, serial W=1 vs "
+                         "cross-step W>1); tracked across PRs by CI")
     args = ap.parse_args(argv)
+
+    only = None
+    if args.only:
+        only = set(args.only.split(","))
+        unknown = only - set(SECTIONS)
+        if unknown:
+            ap.error(f"unknown --only sections {sorted(unknown)}")
+
+    def want(name: str) -> bool:
+        return only is None or name in only
 
     print("name,us_per_call,derived")
     out: dict = {}
-    bench_kernels()
-    bench_runtime(out)
-    bench_transport(out)
-    bench_split_exec(out)
+    if want("kernels"):
+        bench_kernels()
+    if want("runtime"):
+        bench_runtime(out)
+    if want("transport"):
+        bench_transport(out)
+    if want("split_exec"):
+        bench_split_exec(out)
+    if want("split_pipeline"):
+        bench_split_pipeline(out, full=args.full)
     steps = 400 if args.full else 60
-    run_paper_tables(steps, out)
+    if want("tables"):
+        run_paper_tables(steps, out)
     if args.figures:
         from benchmarks import paper_tables as pt
 
@@ -265,13 +453,21 @@ def main(argv=None) -> int:
         print("\n== roofline (from the dry-run matrix) ==")
         print(to_markdown(rows))
 
-    for name in ("runtime", "transport", "split_exec", "table2", "table3",
-                 "table4", "table5", "table6"):
+    for name in ("runtime", "transport", "split_exec", "split_pipeline",
+                 "table2", "table3", "table4", "table5", "table6"):
         if name in out:
             print(f"\n== {name} ==")
             for row in out[name]:
                 print(" ", {k: (round(v, 4) if isinstance(v, float) else v)
                             for k, v in row.items()})
+    if args.bench_json and ("split_exec" in out or "split_pipeline" in out):
+        # the machine-readable perf artifact CI uploads: wall-clock per
+        # family and per transport, serial (W=1) vs cross-step (W>1)
+        artifact = {k: out[k] for k in ("split_exec", "split_pipeline")
+                    if k in out}
+        json.dump(artifact, open(args.bench_json, "w"), indent=1,
+                  default=str)
+        print(f"\nwrote {args.bench_json}")
     if args.json:
         json.dump(out, open(args.json, "w"), indent=1, default=str)
     return 0

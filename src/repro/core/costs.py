@@ -63,6 +63,27 @@ def aux_exchange_bytes(microbatches: int, itemsize: int = 4) -> int:
     return microbatches * itemsize
 
 
+def _clock_placements(plans: dict, link, objective: str,
+                      cross_step: int) -> tuple[dict, int]:
+    """Shared sweep core of the two placement advisors: clock every
+    candidate ``depth -> StepPlan`` under the chosen objective (with the
+    cross-step window amortized over a short multi-step run) and return
+    (times_by_depth, argmin_depth — shallower wins ties)."""
+    from repro.runtime.engine import simulate_pipelined, simulate_serial
+
+    sim_steps = 1 if cross_step == 1 else 2 * cross_step
+    times: dict[int, float] = {}
+    for depth, plan in plans.items():
+        if objective == "serial":
+            times[depth] = simulate_serial(plan, link).step_time_s
+        else:
+            times[depth] = simulate_pipelined(
+                plan, link, steps=sim_steps,
+                cross_step=cross_step).step_time_s
+    recommended = min(times, key=lambda d: (times[d], d))
+    return times, recommended
+
+
 def advise_split_depth(
     cfg: MLPSplitConfig,
     *,
@@ -74,6 +95,7 @@ def advise_split_depth(
     objective: str = "heuristic",
     microbatches: int = 4,
     latency_s: float = 0.0,
+    cross_step: int = 1,
 ) -> dict:
     """The paper's §4.4 placement guidance, made executable — and, beyond
     the paper, runtime-aware.
@@ -96,6 +118,12 @@ def advise_split_depth(
       towers in parallel and serializes only the shared role-0 server — so
       pipelining rewards pushing layers out to the (parallel) clients long
       after the serial clock has given up on them.
+
+    ``cross_step`` > 1 clocks the pipelined objective with the driver's
+    in-flight window W (``simulate_pipelined(cross_step=W)``): step t+1
+    tower forwards overlap step t's server backward, amortized over a
+    short multi-step run, so the sweep sees the same overlap the
+    cross-step executor delivers.
 
     Returns the recommended tower depth (in units of the configured hidden
     stack) plus the per-candidate step times (simulated objectives) or the
@@ -146,8 +174,7 @@ def advise_split_depth(
     # simulated objectives: sweep the placement of the hidden stack
     import dataclasses
 
-    from repro.runtime.engine import (plan_step, simulate_pipelined,
-                                      simulate_serial)
+    from repro.runtime.engine import plan_step
     from repro.runtime.links import LinkModel
 
     if batch_size % microbatches:
@@ -160,23 +187,98 @@ def advise_split_depth(
         client_flops_per_s=client_flops_per_s,
         server_flops_per_s=server_flops_per_s,
     )
-    times: dict[int, float] = {}
-    for depth in range(min_private_layers, len(stack) + 1):
-        cand = dataclasses.replace(
-            cfg, tower_hidden=stack[:depth], server_hidden=stack[depth:])
-        plan = plan_step(cand, batch_size, microbatches)
-        if objective == "serial":
-            times[depth] = simulate_serial(plan, link).step_time_s
-        else:
-            times[depth] = simulate_pipelined(plan, link).step_time_s
-    recommended = min(times, key=lambda d: (times[d], d))
+    plans = {
+        depth: plan_step(
+            dataclasses.replace(cfg, tower_hidden=stack[:depth],
+                                server_hidden=stack[depth:]),
+            batch_size, microbatches)
+        for depth in range(min_private_layers, len(stack) + 1)
+    }
+    times, recommended = _clock_placements(plans, link, objective, cross_step)
     return {
         "objective": objective,
         "recommended_tower_layers": recommended,
         "step_time_s_by_depth": times,
+        "cross_step": cross_step,
         "rationale": (
             f"{objective} clock argmin over placements of the "
-            f"{len(stack)}-layer hidden stack (M={microbatches})"
+            f"{len(stack)}-layer hidden stack (M={microbatches}"
+            + (f", W={cross_step}" if cross_step > 1 else "") + ")"
+        ),
+    }
+
+
+def advise_arch_split_depth(
+    cfg,
+    *,
+    batch_size: int,
+    seq_len: int,
+    bandwidth_bytes_per_s: float = 1e8,
+    client_flops_per_s: float = 5e9,
+    server_flops_per_s: float = 5e10,
+    objective: str = "pipelined",
+    microbatches: int = 4,
+    cross_step: int = 1,
+    latency_s: float = 1e-3,
+    min_tower_layers: int = 1,
+) -> dict:
+    """Runtime-aware tower-depth placement for LM-scale arch configs.
+
+    The ``advise_split_depth`` sweep above reads the paper-MLP hidden
+    stack; this is the same sweep over a :class:`~repro.configs.base.
+    ArchConfig`'s layer budget via ``runtime.engine.plan_from_arch``: every
+    ``tower_layers`` placement in ``[min_tower_layers, num_layers - 1]``
+    (the server always keeps at least one layer plus the unembed head) is
+    clocked with ``simulate_serial`` / ``simulate_pipelined`` (M =
+    ``microbatches``, driver window ``cross_step``) under a uniform
+    :class:`~repro.runtime.links.LinkModel` built from the given rates, and
+    the argmin is recommended.  Towers run at width ``d_model / K``, so a
+    layer moved out to the (parallel) clients is cheaper than the same
+    layer on the serialized role-0 server whenever the clients' aggregate
+    rate keeps up — the sweep quantifies exactly when.
+    """
+    import dataclasses
+
+    from repro.runtime.engine import plan_from_arch
+    from repro.runtime.links import LinkModel
+
+    if objective not in ("serial", "pipelined"):
+        raise ValueError(
+            f"objective must be serial|pipelined, got {objective!r}")
+    v = cfg.vertical
+    if v is None:
+        raise ValueError(f"{cfg.name} has no vertical config")
+    if batch_size % microbatches:
+        raise ValueError(
+            f"batch {batch_size} not divisible by microbatches={microbatches}")
+    if not (1 <= min_tower_layers < cfg.num_layers):
+        raise ValueError(
+            f"min_tower_layers must be in [1, {cfg.num_layers - 1}]")
+
+    link = LinkModel.uniform(
+        v.num_clients, latency_s=latency_s,
+        bandwidth_bps=bandwidth_bytes_per_s,
+        client_flops_per_s=client_flops_per_s,
+        server_flops_per_s=server_flops_per_s,
+    )
+    plans = {
+        depth: plan_from_arch(
+            cfg.with_vertical(dataclasses.replace(v, tower_layers=depth)),
+            batch_size, seq_len, microbatches)
+        for depth in range(min_tower_layers, cfg.num_layers)
+    }
+    times, recommended = _clock_placements(plans, link, objective, cross_step)
+    return {
+        "objective": objective,
+        "recommended_tower_layers": recommended,
+        "configured_tower_layers": v.tower_layers,
+        "step_time_s_by_depth": times,
+        "cross_step": cross_step,
+        "rationale": (
+            f"{objective} clock argmin over tower_layers placements of "
+            f"{cfg.name}'s {cfg.num_layers}-layer stack (K={v.num_clients}, "
+            f"M={microbatches}"
+            + (f", W={cross_step}" if cross_step > 1 else "") + ")"
         ),
     }
 

@@ -35,6 +35,12 @@ Examples:
       --steps 20 --transport inproc --runtime nowait --microbatches 4 \\
       --straggler 1
 
+  # cross-step pipelined split execution: keep 2 steps in flight so step
+  # t+1 tower forwards overlap step t's server backward + jacobian drain
+  # (towers train on delayed gradients, one update behind):
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \\
+      --steps 20 --transport inproc --inflight-steps 2
+
   # split execution is family-agnostic (repro.models.split_program): moe
   # ships its router aux loss through the protocol's role-0 -> role-3 aux
   # slot, audio trains mel-band encoder towers, vlm by-source modality
@@ -95,27 +101,51 @@ def _runtime_report(cfg, args) -> dict:
                                simulate_serial)
 
     M = args.microbatches if args.runtime != "serial" else 1
+    W = args.inflight_steps
     plan = plan_from_arch(cfg, args.batch, args.seq, M)
     link = LinkModel.uniform(cfg.vertical.num_clients)
     if args.straggler is not None:
         link = link.with_straggler(args.straggler, slowdown=10.0)
     serial_s = simulate_serial(plan, link).step_time_s
-    if args.runtime == "serial":
+    if args.runtime == "serial" and W == 1:
         report = {"mode": "serial", "step_time_s": serial_s}
     else:
-        sim = simulate_pipelined(plan, link, mode=args.runtime)
+        sim_mode = "pipelined" if args.runtime == "serial" else args.runtime
+        sim = simulate_pipelined(plan, link, mode=sim_mode,
+                                 steps=1 if W == 1 else 2 * W, cross_step=W)
         report = {
             "mode": sim.mode,
             "step_time_s": sim.step_time_s,
             "speedup_vs_serial": serial_s / sim.step_time_s,
             "microbatches": sim.microbatches,
-            "deadline_misses": sim.total_misses,
-            "cut_bytes_per_client": sim.cut_bytes_per_client,
+            "inflight_steps": W,
+            # SimReport totals cover all sim.steps simulated steps; report
+            # per-step figures so W settings stay comparable to each other
+            # and to the measured per-step ExecReport
+            "sim_steps": sim.steps,
+            "deadline_misses_per_step": sim.total_misses / sim.steps,
+            "cut_bytes_per_client": sim.cut_bytes_per_client // sim.steps,
         }
+    # runtime-aware placement: where the sweep would put the cut for this
+    # schedule (costs.advise_arch_split_depth over plan_from_arch)
+    if cfg.num_layers > 1:
+        from repro.core.costs import advise_arch_split_depth
+
+        # match the clock reported above: a cross-step window makes even a
+        # --runtime serial schedule an overlapped (pipelined) one
+        advise = advise_arch_split_depth(
+            cfg, batch_size=args.batch, seq_len=args.seq,
+            objective="serial" if (args.runtime == "serial" and W == 1)
+            else "pipelined",
+            microbatches=M, cross_step=W)
+        report["advised_tower_layers"] = advise["recommended_tower_layers"]
+        report["configured_tower_layers"] = cfg.vertical.tower_layers
     print(f"runtime[{args.runtime}] simulated step "
           f"{report['step_time_s']*1e3:.2f} ms"
           + (f" ({report['speedup_vs_serial']:.2f}x vs serial)"
-             if "speedup_vs_serial" in report else ""))
+             if "speedup_vs_serial" in report else "")
+          + (f"  advised tower_layers={report['advised_tower_layers']}"
+             if "advised_tower_layers" in report else ""))
     return report
 
 
@@ -142,6 +172,12 @@ def main(argv=None):
                     help="split-training schedule to clock (repro.runtime)")
     ap.add_argument("--microbatches", type=int, default=4,
                     help="pipeline depth for --runtime pipelined/nowait")
+    ap.add_argument("--inflight-steps", type=int, default=1,
+                    help="cross-step window W: submit step t+1 tower "
+                         "forwards while step t's server backward/jacobian "
+                         "drain is in flight (W>1 trains towers on delayed "
+                         "gradients, one update behind; W=1 is the exact "
+                         "per-step barrier)")
     ap.add_argument("--straggler", type=int, default=None,
                     help="degrade this client 10x in the runtime simulation "
                          "(real wall-clock delay under --transport "
@@ -191,6 +227,9 @@ def main(argv=None):
         # fail fast — the runtime report renders after training finishes
         if args.microbatches < 1:
             raise SystemExit(f"--microbatches must be >= 1, got {args.microbatches}")
+        if args.inflight_steps < 1:
+            raise SystemExit(
+                f"--inflight-steps must be >= 1, got {args.inflight_steps}")
         if args.runtime != "serial" and args.batch % args.microbatches:
             raise SystemExit(
                 f"--batch {args.batch} not divisible by "
@@ -215,17 +254,20 @@ def main(argv=None):
         _, metrics, report = train_split(
             cfg, loader, steps=args.steps, batch=args.batch, seq=args.seq,
             transport=args.transport, runtime=args.runtime,
-            microbatches=args.microbatches, learning_rate=args.lr,
+            microbatches=args.microbatches,
+            inflight_steps=args.inflight_steps, learning_rate=args.lr,
             seed=args.seed, straggler=args.straggler,
         )
         summary = metrics.summary()
         summary.update(arch=cfg.name, params=n_params, steps=args.steps,
-                       vertical=args.vertical, transport=args.transport)
+                       vertical=args.vertical, transport=args.transport,
+                       inflight_steps=args.inflight_steps)
         if report is not None:
             summary["runtime"] = {
                 "mode": report.mode,
                 "transport": args.transport,
                 "step_time_s": report.step_time_s,
+                "staleness": getattr(report, "staleness", 0),
                 "deadline_misses": report.total_misses,
                 "cut_bytes_per_client": report.cut_bytes_per_client,
             }

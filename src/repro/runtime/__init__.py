@@ -21,13 +21,21 @@ Three runtimes (``--runtime`` on repro.launch.train):
 
 Layout: ``links`` (per-link latency/bandwidth + compute rates), ``clock``
 (event heap + FIFO resources), ``engine`` (StepPlan, simulate_serial /
-simulate_pipelined, pipelined_step wrapper), ``deadline`` (adaptive
-no-wait windows from per-client arrival EWMAs), ``executor`` (the Executor
-— the ONE execution path that moves real payloads over any
-``repro.transport`` backend; ``protocol_step`` and ``pipelined_step`` are
-thin wrappers over it).  Benchmarks: ``python -m benchmarks.run`` has a
-runtime section sweeping serial vs pipelined vs no-wait at K in {2, 4, 8}
-and a transport section timing real execution over threads.
+simulate_pipelined — including the multi-step cross-step window
+``simulate_pipelined(steps, cross_step)`` — and the pipelined_step
+wrapper), ``deadline`` (adaptive no-wait windows from per-client arrival
+EWMAs), ``executor`` (the Executor — the ONE execution path that moves
+real payloads over any ``repro.transport`` backend, split into
+``submit_step`` / ``collect_step`` halves; ``protocol_step`` and
+``pipelined_step`` are thin wrappers over it), ``pipeline``
+(``StepPipeline`` — the cross-step window driver: W steps in flight, step
+t+1 tower forwards overlapping step t's server backward and jacobian
+drain; W=1 is the exact per-step barrier, W>1 trains towers on delayed
+gradients, one update behind).  Benchmarks: ``python -m benchmarks.run``
+has a runtime section sweeping serial vs pipelined vs no-wait at K in
+{2, 4, 8}, a transport section timing real execution over threads, and a
+split_pipeline section measuring W=1 vs W=2 wall-clock against the
+simulator's prediction (written to ``BENCH_split_exec.json``).
 """
 from repro.runtime.clock import EventClock, Resource
 from repro.runtime.deadline import AdaptiveDeadline
@@ -49,6 +57,7 @@ from repro.runtime.executor import (
     fast_merge,
 )
 from repro.runtime.links import LinkModel
+from repro.runtime.pipeline import StepPipeline
 
 __all__ = [
     "AdaptiveDeadline",
@@ -60,6 +69,7 @@ __all__ = [
     "LinkModel",
     "MODES",
     "SimReport",
+    "StepPipeline",
     "StepPlan",
     "default_deadline_s",
     "fast_merge",

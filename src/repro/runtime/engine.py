@@ -155,39 +155,47 @@ def default_deadline_s(plan: StepPlan, link: LinkModel) -> float:
 @dataclass
 class SimReport:
     mode: str
-    step_time_s: float
+    step_time_s: float  # per-step (the S-step makespan / steps)
     microbatches: int
-    live: list[list[float]]  # (M, K) — 1.0 = client's cut made the merge
+    live: list[list[float]]  # (S*M, K) — 1.0 = client's cut made the merge
     misses_per_client: list[int]
-    cut_bytes_per_client: int  # uplink bytes per client for the full step
+    cut_bytes_per_client: int  # uplink bytes per client, all steps
     collective_bytes_per_client: int  # analytic all-reduce/all-gather model
     server_busy_s: float = 0.0
+    steps: int = 1
+    cross_step: int = 1  # driver window W (staleness = W - 1)
+    total_time_s: float = 0.0  # S-step makespan
 
     @property
     def total_misses(self) -> int:
         return sum(self.misses_per_client)
 
 
-def _report_skeleton(plan: StepPlan, mode: str) -> SimReport:
+def _report_skeleton(plan: StepPlan, mode: str, steps: int = 1,
+                     cross_step: int = 1) -> SimReport:
     M, K = plan.microbatches, plan.num_clients
     return SimReport(
         mode=mode,
         step_time_s=0.0,
         microbatches=M,
-        live=[[1.0] * K for _ in range(M)],
+        live=[[1.0] * K for _ in range(steps * M)],
         misses_per_client=[0] * K,
-        cut_bytes_per_client=plan.cut_bytes * M,
-        collective_bytes_per_client=M * collective_bytes_per_merge(
+        cut_bytes_per_client=plan.cut_bytes * M * steps,
+        collective_bytes_per_client=steps * M * collective_bytes_per_merge(
             plan.merge, plan.cut_elements, K, plan.bytes_per_elt
         ),
+        steps=steps,
+        cross_step=cross_step,
     )
 
 
-def simulate_serial(plan: StepPlan, link: LinkModel) -> SimReport:
+def simulate_serial(plan: StepPlan, link: LinkModel, *,
+                    steps: int = 1) -> SimReport:
     """Clock the serial ``protocol_step`` schedule: every phase completes
     before the next begins, clients one after another, full batch at once
     (so per-microbatch quantities scale by M but each link pays its latency
-    once per message, not once per microbatch)."""
+    once per message, not once per microbatch).  Steps never overlap, so
+    ``steps`` just scales the makespan."""
     M, K = plan.microbatches, plan.num_clients
     t = 0.0
     for k in range(K):
@@ -199,9 +207,10 @@ def simulate_serial(plan: StepPlan, link: LinkModel) -> SimReport:
     for k in range(K):
         t += link.transfer_s(k, plan.cut_bytes * M)
         t += link.client_compute_s(k, plan.tower_bwd_flops[k] * M)
-    report = _report_skeleton(plan, "serial")
+    report = _report_skeleton(plan, "serial", steps)
     report.step_time_s = t
-    report.server_busy_s = link.server_compute_s(plan.server_flops * M)
+    report.total_time_s = t * steps
+    report.server_busy_s = link.server_compute_s(plan.server_flops * M) * steps
     return report
 
 
@@ -212,8 +221,21 @@ def simulate_pipelined(
     mode: str = "pipelined",
     deadline_s: Optional[float] = None,
     deadline: Optional[AdaptiveDeadline] = None,
+    steps: int = 1,
+    cross_step: int = 1,
 ) -> SimReport:
     """Event-driven makespan of the overlapped schedule; see module doc.
+
+    ``steps`` clocks a run of S training steps; ``cross_step`` is the
+    driver's in-flight window W (``runtime.pipeline.StepPipeline``): the
+    driver submits step s only once step s-W has fully collected, so at
+    W=1 consecutive steps barrier exactly like ``Executor.run_step`` while
+    at W>1 step t+1's tower forwards run against step t's server
+    compute/jacobian drain.  Driver ordering is modeled faithfully: a
+    client streams all of step t+1's forwards before step t's tower
+    backwards (the FIFO worker queue), and the role-0 server merges step
+    t+1 microbatches only after step t's ``step_done`` barrier (client
+    tower backwards + an ack latency).
 
     No-wait deadlines: an explicit ``deadline_s`` is a static per-microbatch
     window (the pre-adaptive behavior); otherwise an
@@ -225,10 +247,14 @@ def simulate_pipelined(
         raise ValueError(f"mode must be pipelined|nowait, got {mode!r}")
     if link.num_clients != plan.num_clients:
         raise ValueError("link model and plan disagree on K")
+    if steps < 1 or cross_step < 1:
+        raise ValueError(f"steps/cross_step must be >= 1, got "
+                         f"{steps}/{cross_step}")
     if mode == "nowait" and deadline_s is None and deadline is None:
         deadline = AdaptiveDeadline(
             plan.num_clients, initial_s=default_deadline_s(plan, link))
 
+    S, W = steps, min(cross_step, steps)
     M, K = plan.microbatches, plan.num_clients
     clock = EventClock()
     client_cpu = [Resource(f"client{k}/cpu") for k in range(K)]
@@ -236,96 +262,172 @@ def simulate_pipelined(
     downlink = [Resource(f"client{k}/down") for k in range(K)]
     server = Resource("server")
 
-    arrived: list[dict[int, float]] = [{} for _ in range(M)]
-    first_arrival: dict[int, float] = {}
-    started = [False] * M
-    report = _report_skeleton(plan, mode)
+    arrived: dict[tuple[int, int], dict[int, float]] = {}
+    first_arrival: dict[tuple[int, int], float] = {}
+    started: set[tuple[int, int]] = set()
+    report = _report_skeleton(plan, mode, S, cross_step)
     done_t = [0.0]
+
+    # driver window state: step s's forwards are submitted (released) once
+    # step s-W has collected; the first W steps fill the pipeline at t=0
+    released = [s < W for s in range(S)]
+    fwd_waiting: dict[int, list[int]] = {}  # step -> clients ready for it
+    server_waiting: dict[int, list[int]] = {}  # step -> mbs gated on collect
+    collected = [False] * S
+    server_done_count = [0] * S
+    finish_submitted = [False] * S
+    # per (step, client): jacobians still outstanding before step_done
+    bwd_pending = [[M] * K for _ in range(S)]
+    step_done_sent: set[tuple[int, int]] = set()
+    done_clients = [0] * S
 
     def finish_at(t: float) -> None:
         done_t[0] = max(done_t[0], t)
 
-    def client_fwd(k: int, m: int) -> None:
+    def client_fwd(k: int, s: int, m: int) -> None:
         _, end = client_cpu[k].acquire(clock.now, link.client_compute_s(
             k, plan.tower_fwd_flops[k]))
-        clock.post(end, lambda: send_cut(k, m))
+        clock.post(end, lambda: send_cut(k, s, m))
         if m + 1 < M:  # stream the next microbatch immediately
-            clock.post(end, lambda: client_fwd(k, m + 1))
+            clock.post(end, lambda: client_fwd(k, s, m + 1))
+        elif s + 1 < S:
+            # next step's forwards sit at the head of the FIFO queue the
+            # moment the driver submits them
+            if released[s + 1]:
+                clock.post(end, lambda: client_fwd(k, s + 1, 0))
+            else:
+                fwd_waiting.setdefault(s + 1, []).append(k)
 
-    def send_cut(k: int, m: int) -> None:
+    def send_cut(k: int, s: int, m: int) -> None:
         _, end = uplink[k].acquire(clock.now, link.transfer_s(k, plan.cut_bytes))
-        clock.post(end, lambda: arrive_cut(k, m))
+        clock.post(end, lambda: arrive_cut(k, s, m))
 
-    def arrive_cut(k: int, m: int) -> None:
-        if m not in first_arrival:
-            first_arrival[m] = clock.now
+    def arrive_cut(k: int, s: int, m: int) -> None:
+        key = (s, m)
+        if key not in first_arrival:
+            first_arrival[key] = clock.now
         if deadline is not None:
             # late arrivals observe too, so a recovered straggler can earn
             # its way back under the (loosening) deadline
-            deadline.observe(k, clock.now - first_arrival[m])
-        if started[m]:  # missed the no-wait deadline: discarded at role 0
+            deadline.observe(k, clock.now - first_arrival[key])
+        if key in started:  # missed the no-wait deadline: discarded at role 0
             return
-        arrived[m][k] = clock.now
-        if len(arrived[m]) == K:
-            start_server(m)
-        elif mode == "nowait" and len(arrived[m]) == 1:
+        arrived.setdefault(key, {})[k] = clock.now
+        if len(arrived[key]) == K:
+            ready_server(s, m)
+        elif mode == "nowait" and len(arrived[key]) == 1:
             window = deadline_s if deadline is None else deadline.deadline_s()
-            clock.post_in(window, lambda: hit_deadline(m))
+            clock.post_in(window, lambda: hit_deadline(s, m))
 
-    def hit_deadline(m: int) -> None:
-        if not started[m]:
-            start_server(m)
+    def hit_deadline(s: int, m: int) -> None:
+        if (s, m) not in started:
+            ready_server(s, m)
 
-    def start_server(m: int) -> None:
-        started[m] = True
+    ready: set[tuple[int, int]] = set()
+
+    def ready_server(s: int, m: int) -> None:
+        if (s, m) in ready:  # deadline fired AND the barrier completed
+            return
+        ready.add((s, m))
+        # the single-threaded driver only reaches step s's microbatches
+        # after step s-1's step_done barrier
+        if s > 0 and not collected[s - 1]:
+            server_waiting.setdefault(s, []).append(m)
+            return
+        start_server(s, m)
+
+    def start_server(s: int, m: int) -> None:
+        started.add((s, m))
         for k in range(K):
-            if k not in arrived[m]:
-                report.live[m][k] = 0.0
+            if k not in arrived.get((s, m), {}):
+                report.live[s * M + m][k] = 0.0
                 report.misses_per_client[k] += 1
+                note_bwd_skip(s, k)
         # merge + server forward (1/3 of the server flops; bwd is the other 2/3)
         _, end = server.acquire(clock.now, link.server_compute_s(plan.server_flops / 3))
-        clock.post(end, lambda: head_exchange(m))
+        clock.post(end, lambda: head_exchange(s, m))
 
-    def head_exchange(m: int) -> None:
+    def head_exchange(s: int, m: int) -> None:
         # head output -> role 3 on the label-holder's downlink; the server
         # is FREE to forward the next microbatch meanwhile
         lh = plan.label_holder
         _, end = downlink[lh].acquire(
             clock.now, link.transfer_s(lh, plan.head_bytes))
-        clock.post(end, lambda: head_return(m))
+        clock.post(end, lambda: head_return(s, m))
 
-    def head_return(m: int) -> None:
+    def head_return(s: int, m: int) -> None:
         # head jacobian back on the label-holder's uplink (contends with
         # its own cut uplinks)
         lh = plan.label_holder
         _, end = uplink[lh].acquire(
             clock.now, link.transfer_s(lh, plan.head_bytes))
-        clock.post(end, lambda: server_bwd(m))
+        clock.post(end, lambda: server_bwd(s, m))
 
-    def server_bwd(m: int) -> None:
+    def server_bwd(s: int, m: int) -> None:
         _, end = server.acquire(clock.now, link.server_compute_s(2 * plan.server_flops / 3))
         finish_at(end)
-        clock.post(end, lambda: server_done(m))
+        clock.post(end, lambda: server_done(s, m))
 
-    def server_done(m: int) -> None:
+    def server_done(s: int, m: int) -> None:
         for k in range(K):
-            if report.live[m][k] > 0:
-                clock.post(clock.now, lambda k=k, m=m: send_jac(k, m))
+            if report.live[s * M + m][k] > 0:
+                clock.post(clock.now, lambda k=k: send_jac(k, s, m))
+        server_done_count[s] += 1
+        if server_done_count[s] == M:
+            # the driver submits finish_step to every client right after
+            # the last microbatch's jacobians
+            finish_submitted[s] = True
+            for k in range(K):
+                maybe_step_done(s, k)
 
-    def send_jac(k: int, m: int) -> None:
+    def send_jac(k: int, s: int, m: int) -> None:
         _, end = downlink[k].acquire(clock.now, link.transfer_s(k, plan.cut_bytes))
-        clock.post(end, lambda: client_bwd(k, m))
+        clock.post(end, lambda: client_bwd(k, s, m))
 
-    def client_bwd(k: int, m: int) -> None:
+    def client_bwd(k: int, s: int, m: int) -> None:
         _, end = client_cpu[k].acquire(clock.now, link.client_compute_s(
             k, plan.tower_bwd_flops[k]))
         finish_at(end)
+        clock.post(end, lambda: bwd_complete(s, k))
+
+    def bwd_complete(s: int, k: int) -> None:
+        bwd_pending[s][k] -= 1
+        maybe_step_done(s, k)
+
+    def note_bwd_skip(s: int, k: int) -> None:
+        bwd_pending[s][k] -= 1
+        maybe_step_done(s, k)
+
+    def maybe_step_done(s: int, k: int) -> None:
+        if (not finish_submitted[s] or bwd_pending[s][k] > 0
+                or (s, k) in step_done_sent):
+            return
+        step_done_sent.add((s, k))
+        clock.post_in(link.latency_s[k], lambda: step_done_arrive(s))
+
+    def step_done_arrive(s: int) -> None:
+        done_clients[s] += 1
+        if done_clients[s] == K:
+            on_collected(s)
+
+    def on_collected(s: int) -> None:
+        collected[s] = True
+        # the driver proceeds: merge any queued step-s+1 microbatches ...
+        for m in server_waiting.pop(s + 1, []):
+            start_server(s + 1, m)
+        # ... and submits step s+W, releasing its client forwards
+        nxt = s + W
+        if nxt < S:
+            released[nxt] = True
+            for k in fwd_waiting.pop(nxt, []):
+                clock.post(clock.now, lambda k=k: client_fwd(k, nxt, 0))
 
     for k in range(K):
-        clock.post(0.0, lambda k=k: client_fwd(k, 0))
+        clock.post(0.0, lambda k=k: client_fwd(k, 0, 0))
     clock.run()
 
-    report.step_time_s = done_t[0]
+    report.total_time_s = done_t[0]
+    report.step_time_s = done_t[0] / S
     report.server_busy_s = server.busy_s
     return report
 

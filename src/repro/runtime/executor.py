@@ -3,9 +3,33 @@
 This is the single execution path behind ``protocol_step`` (serial),
 ``pipelined_step`` (microbatch pipelining / no-wait) and the split-executing
 train loop: one role-0 driver that walks ``step_schedule``, records every
-message in the shared :class:`~repro.core.protocol.Ledger`, merges cut
+message in a per-step :class:`~repro.core.protocol.Ledger`, merges cut
 activations (EMA-imputing no-wait misses), backprops the server network and
 returns per-client jacobians — over a :class:`~repro.transport.Transport`.
+
+The step is split into two halves so a driver can keep several steps in
+flight (cross-step pipelining, :class:`~repro.runtime.pipeline.StepPipeline`):
+
+* :meth:`submit_step` ships every tower-forward request for one step and
+  registers the step's in-flight state (its own Ledger, cut buffers,
+  deadline bookkeeping) keyed by ``(step, microbatch)``;
+* :meth:`collect_step` gathers the OLDEST in-flight step's cuts, runs the
+  role-0 merge/forward/backward per microbatch, fans the jacobians out,
+  and barriers on the workers' ``step_done`` acks.
+
+A single shared event pump routes every transport response to its step's
+buffers, so cuts from step t+1 arriving while step t is being collected
+land where they belong instead of being lost or mis-merged.
+:meth:`run_step` is exactly ``submit_step`` + ``collect_step`` — the
+blocking one-step call every existing caller uses, bit-for-bit unchanged.
+
+At window W > 1 the towers train on delayed gradients — a step's forwards
+run before the previous step's optimizer update has reached the client, so
+tower params are one update behind the submitted forward (server params are
+never stale: the server forward happens at collect time).  The lag is
+surfaced as ``ExecReport.staleness`` (how many steps were submitted after
+the collected one); W = 1 is staleness 0 and reproduces the serial
+semantics exactly.
 
 Drop policies (what happens to a client absent from a microbatch's merge):
 
@@ -26,7 +50,7 @@ clock just decides who made the merge) or, over a real transport in
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Optional
 
 import jax
@@ -39,6 +63,11 @@ from repro.core.protocol import Ledger, step_schedule
 from repro.runtime.deadline import AdaptiveDeadline
 
 DROP_POLICIES = ("neutral", "fused", "impute")
+
+# retired (step, mb) first-arrival timestamps kept around so a no-wait
+# straggler's cut landing after its step was collected still feeds the
+# deadline EWMA (that is how a recovered client re-opens the window)
+_RETIRED_FIRST_T_KEEP = 64
 
 
 def fast_merge(stacked: jnp.ndarray, strategy: str) -> jnp.ndarray:
@@ -80,6 +109,9 @@ class ExecReport:
     cut_bytes_per_client: int
     collective_bytes_per_client: int
     deadline_s: Optional[float] = None  # last deadline used (nowait)
+    # steps submitted after this one before it was collected: the tower
+    # params' delayed-gradient lag (0 = serial semantics, W-1 at window W)
+    staleness: int = 0
 
     @property
     def total_misses(self) -> int:
@@ -97,10 +129,35 @@ class ExecutionResult:
     # mean server-side auxiliary loss shipped role 0 -> role 3 (families
     # with server_aux, e.g. the moe router load-balance term); None otherwise
     aux: Optional[jnp.ndarray] = None
+    step: int = 0  # which training step this result belongs to
+
+
+@dataclass
+class _InflightStep:
+    """Role-0-side state of one submitted-but-uncollected step."""
+
+    step: int
+    labels: object  # batch-major label array / batch_ctx pytree
+    mbsz: int
+    ledger: Ledger
+    submit_t: float
+    cuts: dict = field(default_factory=dict)  # mb -> {client: cut}
+    first_t: dict = field(default_factory=dict)  # mb -> first drain time
+    merged: set = field(default_factory=set)  # mbs already merged
+    sent_jacs: list = field(default_factory=list)  # per-client bwd count
+    done: list = field(default_factory=list)  # per-client step_done
+    grads: list = field(default_factory=list)  # per-client final tower grads
 
 
 class Executor:
-    """Role-0 server driving one training step per :meth:`run_step` call.
+    """Role-0 server driving training steps over a transport.
+
+    One training step is :meth:`submit_step` (ship the tower forwards)
+    followed by :meth:`collect_step` (merge, server backward, jacobian
+    fan-out, step barrier); :meth:`run_step` runs both back-to-back.  Up to
+    the driver's window W steps may sit between submit and collect — the
+    shared pump keys every response by ``(step, microbatch)`` so adjacent
+    steps interleave safely.
 
     The family-specific pieces come in as pure callables (usually from a
     :class:`~repro.models.split_program.SplitProgram`):
@@ -156,90 +213,93 @@ class Executor:
         else:
             self.deadline = None
             self.static_deadline_s = float(deadline)
+        self._schedule = step_schedule(transport.num_clients, label_holder)
+        self._inflight: dict[int, _InflightStep] = {}  # insertion-ordered
+        self._retired_first_t: dict[tuple[int, int], float] = {}
 
-    # -- one step -----------------------------------------------------------
+    # -- step halves ----------------------------------------------------------
 
-    def run_step(self, server_params, labels, *, step: int = 0,
-                 features: Optional[list] = None, liveness=None,
-                 merge_mask=None, ema_state: Optional[dict] = None,
-                 ledger: Optional[Ledger] = None, collect_grads: bool = True,
-                 report=None) -> ExecutionResult:
-        """Execute one protocol step.
+    @property
+    def inflight_steps(self) -> list[int]:
+        """Steps submitted but not yet collected, oldest first."""
+        return list(self._inflight)
+
+    def submit_step(self, step: int, labels, *, features: Optional[list] = None,
+                    ledger: Optional[Ledger] = None) -> None:
+        """Ship every tower-forward request of ``step`` and register its
+        in-flight state.
 
         ``features`` (per-client arrays, batch-major) are shipped in the
         forward requests; omit them when workers own a ``feature_fn``.
         ``labels`` is the role-0/3-side per-step context — a plain label
         array or any batch-major pytree (a SplitProgram's ``batch_ctx``);
-        microbatch slicing maps over its leaves.  ``liveness`` is an (M, K)
-        0/1 matrix from a simulated clock; without it, ``"nowait"``
-        measures liveness against wall-clock deadlines and other modes
-        barrier on all K cuts.  A ``report`` passed in (the simulated
-        clock's) is returned untouched; otherwise a measured
-        :class:`ExecReport` is built.
+        microbatch slicing maps over its leaves.  Each step audits its
+        bytes in its OWN :class:`~repro.core.protocol.Ledger`.
         """
         transport, K, M = self.transport, self.transport.num_clients, self.microbatches
+        if step in self._inflight:
+            raise ValueError(f"step {step} already in flight")
         B = jax.tree_util.tree_leaves(labels)[0].shape[0]
         if B % M:
             raise ValueError(f"batch {B} not divisible by microbatches={M}")
-        mbsz = B // M
-        ledger = ledger if ledger is not None else Ledger()
-        schedule = step_schedule(K, self.label_holder)
-        t0 = time.monotonic()
+        st = _InflightStep(
+            step=step, labels=labels, mbsz=B // M,
+            ledger=ledger if ledger is not None else Ledger(),
+            submit_t=time.monotonic(),
+            sent_jacs=[0] * K, done=[False] * K, grads=[None] * K,
+        )
+        self._inflight[step] = st
 
         # submit every tower forward upfront: clients stream microbatches in
         # order on their own resources (the overlap the pipeline exists for)
         for m in range(M):
-            for spec in schedule.cuts:
+            for spec in self._schedule.cuts:
                 req = {"op": "forward", "step": step, "mb": m}
                 if features is not None:
-                    sl = slice(m * mbsz, (m + 1) * mbsz)
+                    sl = slice(m * st.mbsz, (m + 1) * st.mbsz)
                     req["feats"] = features[spec.client][sl]
                 transport.submit(spec.client, req)
 
-        cuts_buf: dict[int, dict] = {}
-        first_t: dict[int, float] = {}
-        step_done = [False] * K
-        final_grads: list = [None] * K
+    def collect_step(self, server_params, *, liveness=None, merge_mask=None,
+                     ema_state: Optional[dict] = None,
+                     collect_grads: bool = True,
+                     report=None) -> ExecutionResult:
+        """Collect the OLDEST in-flight step: merge its microbatches, run the
+        role-0 forward/backward, fan jacobians out, barrier on ``step_done``.
+
+        ``liveness`` is an (M, K) 0/1 matrix from a simulated clock; without
+        it, ``"nowait"`` measures liveness against wall-clock deadlines and
+        other modes barrier on all K cuts.  A ``report`` passed in (the
+        simulated clock's) is returned untouched; otherwise a measured
+        :class:`ExecReport` is built.
+        """
+        if not self._inflight:
+            raise RuntimeError("no in-flight step to collect "
+                               "(call submit_step first)")
+        st = next(iter(self._inflight.values()))
+        transport, K, M = self.transport, self.transport.num_clients, self.microbatches
+        schedule = self._schedule
+        # steps submitted after this one and still in flight — robust to
+        # non-consecutive step ids and to barrier reuse of an executor
+        staleness = sum(1 for s in self._inflight if s > st.step)
+        mbsz = st.mbsz
+
         losses, aux_acc, server_grad_acc, live_matrix = [], [], [], []
         misses = [0] * K
         last_deadline: Optional[float] = self.static_deadline_s
-
-        def drain(timeout: Optional[float]) -> bool:
-            got = transport.next_response(timeout)
-            if got is None:
-                return False
-            k, resp = got
-            op = resp["op"]
-            if op == "cut":
-                now = time.monotonic()
-                m = resp["mb"]
-                cuts_buf.setdefault(m, {})[k] = jnp.asarray(resp["cut"])
-                if m not in first_t:
-                    first_t[m] = now
-                if self.deadline is not None:
-                    # late arrivals observe too: a recovered straggler must
-                    # be able to loosen the deadline back open
-                    self.deadline.observe(k, now - first_t[m])
-                ledger.record_spec(schedule.cuts[k], resp["cut"])
-            elif op == "step_done":
-                step_done[k] = True
-                if resp.get("grad") is not None:
-                    final_grads[k] = jax.tree_util.tree_map(
-                        jnp.asarray, resp["grad"])
-            # "grad" responses are per-microbatch acks; nothing to do
-            return True
+        cuts_in = None
 
         for m in range(M):
-            live_row, deadline_used = self._gather(
-                m, cuts_buf, first_t, drain, liveness)
+            live_row, deadline_used = self._gather(st, m, liveness)
             if deadline_used is not None:
                 last_deadline = deadline_used
             for k in range(K):
                 if live_row[k] <= 0:
                     misses[k] += 1
             live_matrix.append(live_row)
+            st.merged.add(m)
 
-            arrived = cuts_buf.pop(m, {})
+            arrived = st.cuts.pop(m, {})
             if self.merge_fn is not None:
                 # non-uniform program merge (e.g. vlm sequence concat):
                 # cuts differ in shape per client, so there is no stack to
@@ -250,13 +310,11 @@ class Executor:
                         f"missing clients "
                         f"{sorted(set(range(K)) - set(arrived))}")
                 cuts_in = [arrived[k] for k in range(K)]
-                probe = cuts_in[0]
             else:
                 proto = next(iter(arrived.values()))
                 cuts_in = jnp.stack([
                     arrived.get(k, jnp.zeros_like(proto)) for k in range(K)
                 ])
-                probe = cuts_in[0]
                 if self.drop_policy == "impute" and ema_state is None:
                     ema_state = {
                         "ema": jnp.zeros((K, cuts_in.shape[-1]), jnp.float32),
@@ -264,7 +322,7 @@ class Executor:
                     }
 
             labels_m = jax.tree_util.tree_map(
-                lambda a: a[m * mbsz:(m + 1) * mbsz], labels)
+                lambda a: a[m * mbsz:(m + 1) * mbsz], st.labels)
             live_vec = jnp.asarray(live_row, jnp.float32)
 
             def server_loss(server_p, cuts):
@@ -297,21 +355,22 @@ class Executor:
             (loss_m, (logits, aux_m, ema_state)), (sg, cut_grads) = \
                 jax.value_and_grad(server_loss, argnums=(0, 1), has_aux=True
                                    )(server_params, cuts_in)
-            ledger.record_spec(schedule.head_out, logits)
+            st.ledger.record_spec(schedule.head_out, logits)
             if self.server_aux:
                 # the aux scalar rides the role-0 -> role-3 loss exchange
-                ledger.record_spec(schedule.aux, aux_m)
+                st.ledger.record_spec(schedule.aux, aux_m)
                 aux_acc.append(aux_m)
-            ledger.record_spec(schedule.head_jac, logits)
+            st.ledger.record_spec(schedule.head_jac, logits)
 
             for spec in schedule.jacs:
                 k = spec.client
                 # serial/neutral semantics: jacobians flow to every client;
                 # no-wait: a missed deadline skips this microbatch's update
                 if self.drop_policy == "neutral" or live_row[k] > 0:
-                    ledger.record_spec(spec, cut_grads[k])
+                    st.ledger.record_spec(spec, cut_grads[k])
+                    st.sent_jacs[k] += 1
                     transport.submit(k, {
-                        "op": "backward", "step": step, "mb": m,
+                        "op": "backward", "step": st.step, "mb": m,
                         "jac": cut_grads[k],
                     })
             losses.append(loss_m)
@@ -319,83 +378,164 @@ class Executor:
 
         for k in range(K):
             transport.submit(k, {
-                "op": "finish_step", "step": step, "microbatches": M,
-                "collect": collect_grads,
+                "op": "finish_step", "step": st.step, "microbatches": M,
+                "collect": collect_grads, "expected_jacs": st.sent_jacs[k],
             })
-        while not all(step_done):
-            if not drain(None):
+        while not all(st.done):
+            if not self._pump(None):
                 raise RuntimeError("transport idle while awaiting step_done")
+        self._retire(st)
 
         loss = sum(losses) / M
         aux = sum(aux_acc) / M if aux_acc else None
         server_grads = tree_mean(server_grad_acc)
-        tower_grads = list(final_grads) if collect_grads else None
+        tower_grads = list(st.grads) if collect_grads else None
         if report is None:
             report = self._build_report(
-                time.monotonic() - t0, live_matrix, misses, ledger,
-                cuts_in, last_deadline)
-        return ExecutionResult(loss, tower_grads, server_grads, ledger,
-                               report, ema_state, aux)
+                time.monotonic() - st.submit_t, live_matrix, misses,
+                st.ledger, cuts_in, last_deadline, staleness)
+        return ExecutionResult(loss, tower_grads, server_grads, st.ledger,
+                               report, ema_state, aux, step=st.step)
 
-    # -- gathering ----------------------------------------------------------
+    def run_step(self, server_params, labels, *, step: int = 0,
+                 features: Optional[list] = None, liveness=None,
+                 merge_mask=None, ema_state: Optional[dict] = None,
+                 ledger: Optional[Ledger] = None, collect_grads: bool = True,
+                 report=None) -> ExecutionResult:
+        """Execute one protocol step: ``submit_step`` + ``collect_step``
+        back-to-back (window 1 — the blocking barrier call)."""
+        self.submit_step(step, labels, features=features, ledger=ledger)
+        return self.collect_step(
+            server_params, liveness=liveness, merge_mask=merge_mask,
+            ema_state=ema_state, collect_grads=collect_grads, report=report)
 
-    def _gather(self, m, cuts_buf, first_t, drain, liveness):
+    # -- the shared event pump ------------------------------------------------
+
+    def _pump(self, timeout: Optional[float]) -> bool:
+        """Drain ONE transport response into its step's buffers; returns
+        False on timeout/idle.  Safe under cross-step interleaving: every
+        response is routed by its ``(step, mb)`` key."""
+        got = self.transport.next_response(timeout)
+        if got is None:
+            return False
+        k, resp = got
+        op = resp["op"]
+        if op == "cut":
+            self._on_cut(k, resp)
+        elif op == "step_done":
+            st = self._inflight.get(resp["step"])
+            if st is not None:
+                st.done[k] = True
+                if resp.get("grad") is not None:
+                    st.grads[k] = jax.tree_util.tree_map(
+                        jnp.asarray, resp["grad"])
+        # "grad" responses are per-microbatch acks; nothing to do
+        return True
+
+    def _on_cut(self, k: int, resp: dict) -> None:
+        now = time.monotonic()
+        step, m = resp["step"], resp["mb"]
+        st = self._inflight.get(step)
+        if st is None:
+            # the step was already collected (a no-wait straggler finishing
+            # long after the fact): the payload is dropped, but the arrival
+            # still feeds the EWMA so a recovered client can re-open the
+            # deadline window
+            first = self._retired_first_t.get((step, m))
+            if self.deadline is not None and first is not None:
+                self.deadline.observe(k, now - first)
+            return
+        if m not in st.first_t:
+            st.first_t[m] = now
+        if self.deadline is not None:
+            spread = now - st.first_t[m]
+            if self.mode == "nowait" and m not in st.merged:
+                # this cut will make the merge — but role 0 may have drained
+                # it long after delivery (busy on an earlier microbatch or
+                # the expired-window sweep), so the raw drain spread can
+                # include server time.  Clamp to the deadline window: a cut
+                # that made the merge arrived within it by definition, and
+                # an unclamped observation would let a busy role 0 inflate
+                # the EWMA and loosen the deadline for no client reason.
+                window = self.static_deadline_s
+                if window is None:
+                    window = self.deadline.deadline_s()
+                if window is not None:
+                    spread = min(spread, window)
+            # genuinely late arrivals (mb already merged) observe their raw
+            # spread — that is how a recovered straggler earns its way back
+            self.deadline.observe(k, spread)
+        st.ledger.record_spec(self._schedule.cuts[k], resp["cut"])
+        if m in st.merged:
+            return  # missed the merge: payload discarded at role 0
+        st.cuts.setdefault(m, {})[k] = jnp.asarray(resp["cut"])
+
+    def _retire(self, st: _InflightStep) -> None:
+        del self._inflight[st.step]
+        for m, t in st.first_t.items():
+            self._retired_first_t[(st.step, m)] = t
+        while len(self._retired_first_t) > _RETIRED_FIRST_T_KEEP:
+            self._retired_first_t.pop(next(iter(self._retired_first_t)))
+
+    # -- gathering ------------------------------------------------------------
+
+    def _gather(self, st: _InflightStep, m: int, liveness):
         """Collect microbatch ``m``'s cuts; returns (live_row, deadline_s)."""
         K = self.transport.num_clients
 
         def have() -> int:
-            return len(cuts_buf.get(m, {}))
+            return len(st.cuts.get(m, {}))
 
         if liveness is not None:
             # simulated clock: the transport delivers every cut; the given
             # matrix decides who made the merge
             while have() < K:
-                if not drain(None):
+                if not self._pump(None):
                     raise RuntimeError("transport idle with cuts outstanding")
             return [float(x) for x in liveness[m]], None
 
         if self.mode != "nowait":
             while have() < K:
-                if not drain(None):
+                if not self._pump(None):
                     raise RuntimeError("transport idle with cuts outstanding")
             return [1.0] * K, None
 
         # real no-wait: grace window after the first arrival
         deadline_used = None
         while have() < K:
-            if m not in first_t:
-                drain(None)  # the first cut opens the window
+            if m not in st.first_t:
+                self._pump(None)  # the first cut opens the window
                 continue
             d = self.static_deadline_s
             if d is None:
                 d = self.deadline.deadline_s()
             if d is None:
                 # bootstrap barrier: no estimate yet, wait for everyone
-                if not drain(None):
+                if not self._pump(None):
                     raise RuntimeError("transport idle with cuts outstanding")
                 continue
             deadline_used = d
-            remaining = (first_t[m] + d) - time.monotonic()
+            remaining = (st.first_t[m] + d) - time.monotonic()
             if remaining <= 0:
                 # window expired — but sweep the queue first: a cut that was
                 # DELIVERED while role 0 was busy on an earlier microbatch
                 # beat the deadline and must not be counted as a miss (the
                 # drain timestamp, not the true arrival, is all we see)
-                while have() < K and drain(0.0):
+                while have() < K and self._pump(0.0):
                     pass
                 if have() < K:
                     break
                 continue
-            drain(remaining)
+            self._pump(remaining)
         if (self.deadline is not None and self.deadline.initial_s is None
                 and have() == K):
             # seed the adaptive controller from the first full barrier
             self.deadline.seed_from_observations()
-        arrived = cuts_buf.get(m, {})
+        arrived = st.cuts.get(m, {})
         return [1.0 if k in arrived else 0.0 for k in range(K)], deadline_used
 
     def _build_report(self, elapsed_s, live_matrix, misses, ledger, cuts,
-                      deadline_s) -> ExecReport:
+                      deadline_s, staleness) -> ExecReport:
         """``cuts`` is the last microbatch's cut set — a (K, ...) stack for
         uniform merges, a per-client list for ``merge_fn`` programs."""
         K = self.transport.num_clients
@@ -428,4 +568,5 @@ class Executor:
             * collective_bytes_per_merge(
                 strategy, per_mb_elements, K, itemsize),
             deadline_s=deadline_s,
+            staleness=staleness,
         )

@@ -1,0 +1,113 @@
+"""Cross-step pipelined driver over the Executor's submit/collect halves.
+
+``Executor.run_step`` is a hard per-step barrier: every client sits idle
+from ``finish_step`` until the next step's forwards are submitted, so
+wall-clock over real transports is ``sum(step_times)``.  The
+:class:`StepPipeline` keeps up to ``window`` steps in flight — step t+1's
+tower forwards are submitted (and, on a threaded/process transport,
+computed) while step t's server backward and jacobian drain are still
+running, which is exactly the overlap ``engine.simulate_pipelined(...,
+cross_step=W)`` clocks.
+
+Semantics by window:
+
+* ``window=1`` — submit immediately followed by collect: bit-for-bit the
+  ``run_step`` barrier (regression-tested per family).
+* ``window=W>1`` — delayed gradients on the towers: a client computes step
+  t's forward before step t-1's optimizer update has reached it, so tower
+  params lag the submitted forward by one update (``ExecReport.staleness``
+  reports the lag; server params are never stale — the server forward runs
+  at collect time with current params).
+
+Typical drive loop (the shape ``train.loop.train_split`` uses)::
+
+    pipeline = StepPipeline(executor, window=W)
+    for step in range(steps):
+        pipeline.submit(step, batch_ctx(next(it)))
+        if pipeline.inflight >= W:
+            res = pipeline.collect(server_params, ema_state=ema_state)
+            ...apply server update, thread ema_state...
+    while pipeline.inflight:
+        res = pipeline.collect(server_params, ema_state=ema_state)
+        ...
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Optional
+
+from repro.core.protocol import Ledger
+from repro.runtime.executor import ExecutionResult, Executor
+
+
+class StepPipeline:
+    """Windowed cross-step driver: at most ``window`` steps between
+    ``submit`` and ``collect``."""
+
+    def __init__(self, executor: Executor, window: int = 1):
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        self.executor = executor
+        self.window = window
+        self._pending: deque[int] = deque()
+
+    # -- state ----------------------------------------------------------------
+
+    @property
+    def inflight(self) -> int:
+        """Steps submitted but not yet collected."""
+        return len(self._pending)
+
+    @property
+    def next_collect(self) -> Optional[int]:
+        """The step the next :meth:`collect` will return, else ``None``."""
+        return self._pending[0] if self._pending else None
+
+    # -- halves ---------------------------------------------------------------
+
+    def submit(self, step: int, labels, *, features: Optional[list] = None,
+               ledger: Optional[Ledger] = None) -> None:
+        """Ship ``step``'s tower forwards (non-blocking on real transports)."""
+        if self._pending and step <= self._pending[-1]:
+            raise ValueError(
+                f"steps must be submitted in order; got {step} after "
+                f"{self._pending[-1]}")
+        self.executor.submit_step(step, labels, features=features,
+                                  ledger=ledger)
+        self._pending.append(step)
+
+    def collect(self, server_params, **collect_kwargs) -> ExecutionResult:
+        """Collect the oldest in-flight step (``liveness`` / ``merge_mask`` /
+        ``ema_state`` / ``collect_grads`` / ``report`` pass through to
+        :meth:`Executor.collect_step`)."""
+        if not self._pending:
+            raise RuntimeError("pipeline empty: nothing to collect")
+        res = self.executor.collect_step(server_params, **collect_kwargs)
+        # pop only after a successful collect so a raising collect_step
+        # (e.g. transport idle) leaves the bookkeeping aligned with the
+        # executor's in-flight state
+        self._pending.popleft()
+        return res
+
+    # -- conveniences ---------------------------------------------------------
+
+    def push(self, server_params, labels, *, step: int,
+             features: Optional[list] = None, ledger: Optional[Ledger] = None,
+             **collect_kwargs) -> Optional[ExecutionResult]:
+        """Submit ``step``; once the window is full, collect and return the
+        oldest step's result (``None`` while the pipeline is still filling).
+        At ``window=1`` this IS ``run_step``."""
+        self.submit(step, labels, features=features, ledger=ledger)
+        if len(self._pending) < self.window:
+            return None
+        return self.collect(server_params, **collect_kwargs)
+
+    def flush(self, server_params, **collect_kwargs) -> list[ExecutionResult]:
+        """Drain every remaining in-flight step, oldest first (end of
+        training).  The same ``collect_kwargs`` apply to each collect; use
+        explicit :meth:`collect` calls to vary them per step (e.g. to thread
+        a no-wait ``ema_state``)."""
+        out = []
+        while self._pending:
+            out.append(self.collect(server_params, **collect_kwargs))
+        return out

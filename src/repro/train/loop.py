@@ -182,6 +182,7 @@ def train_split(
     transport: str = "inproc",
     runtime: str = "serial",
     microbatches: int = 1,
+    inflight_steps: int = 1,
     learning_rate: float = 3e-4,
     warmup: int = 20,
     grad_clip: float = 1.0,
@@ -208,14 +209,28 @@ def train_split(
     imputation in the real tower forward).  Families with a server-side
     auxiliary loss (moe) ship it role 0 -> role 3 through the protocol's
     ``aux_loss`` slot, audited in the ledger.
+
+    ``inflight_steps`` is the cross-step window W driven through
+    :class:`~repro.runtime.pipeline.StepPipeline`: at W > 1, step t+1's
+    tower forwards are submitted (and computed, on threaded/process
+    transports) while step t's server backward and jacobian drain are in
+    flight.  Tower params then train on delayed gradients — one optimizer
+    update behind the submitted forward (``report.staleness``); W = 1 is
+    the exact ``run_step`` barrier.  Step 0 is verified against the serial
+    ``protocol_step`` either way (its forwards always run on the initial
+    params).
     """
     from repro.models.split_program import get_program
     from repro.runtime.executor import Executor
+    from repro.runtime.pipeline import StepPipeline
 
     if cfg.vertical is None:
         raise ValueError("train_split needs a vertical config")
+    if inflight_steps < 1:
+        raise ValueError(f"inflight_steps must be >= 1, got {inflight_steps}")
     mode = "serial" if runtime == "serial" else runtime
     M = 1 if runtime == "serial" else microbatches
+    W = inflight_steps
 
     program = get_program(cfg)
     params = backbone.init_params(cfg, jax.random.PRNGKey(seed))
@@ -235,8 +250,57 @@ def train_split(
     )
     metrics = TrainMetrics()
     report = None
+    max_staleness = 0
     ema_state = None
+    b0 = None  # step-0 batch retained for the deferred verification
     it = iter(loader)
+    t_last = time.time()
+
+    def handle(res):
+        """Consume one collected step: verify (step 0), update the server,
+        thread the EMA state, log."""
+        nonlocal server_params, opt_state, ema_state, report, t_last, \
+            max_staleness
+        max_staleness = max(max_staleness,
+                            getattr(res.report, "staleness", 0))
+        if res.step == 0 and verify_step0:
+            if mode == "nowait" and res.report.total_misses > 0:
+                # the §3 identity only holds at staleness 0: a step-0
+                # deadline miss legitimately reroutes gradients through
+                # the EMA imputation
+                print_fn("step-0 verification skipped: "
+                         f"{res.report.total_misses} no-wait deadline "
+                         "miss(es) — gradients are intentionally "
+                         "imputed, not serial")
+            else:
+                ctx0 = program.batch_ctx(b0)
+                _verify_step0(res, program, tower_params, server_params,
+                              program.features(b0), ctx0, M, verify_atol,
+                              print_fn)
+            if program.has_aux:
+                aux_bytes = res.ledger.bytes_with_tag("aux_loss")
+                print_fn(f"router aux loss {float(res.aux):.6f} "
+                         "transported role0 -> role3 through the "
+                         f"protocol aux slot ({aux_bytes} B in ledger)")
+        server_params, opt_state = opt.update(
+            server_params, res.server_grads, opt_state)
+        ema_state = res.ema_state
+        report = res.report
+        loss = float(res.loss)
+        now = time.time()
+        dt, t_last = now - t_last, now
+        metrics.log(res.step, loss, dt)
+        if res.step % log_every == 0 or res.step == steps - 1:
+            miss = res.report.total_misses if res.report else 0
+            print_fn(f"step {res.step:5d}  loss {loss:8.4f}  "
+                     f"{dt*1e3:8.1f} ms"
+                     f"  [{transport}/{mode}"
+                     + (f" W={W}" if W > 1 else "")
+                     + (f" aux={float(res.aux):.4f}"
+                        if res.aux is not None else "")
+                     + (f" misses={miss}" if mode == "nowait" else "")
+                     + "]")
+
     try:
         # inside the try: Executor.__init__ validates program/runtime
         # compatibility (e.g. a merge_fn program cannot EMA-impute) and the
@@ -244,50 +308,30 @@ def train_split(
         executor = Executor(tr, program.server_fwd, program.loss_fn,
                             program.merge, mode=mode, microbatches=M,
                             **program.executor_kwargs)
+        pipeline = StepPipeline(executor, window=W)
+
+        def collect_one():
+            target = pipeline.next_collect
+            handle(pipeline.collect(
+                server_params, ema_state=ema_state,
+                collect_grads=(target == 0 and verify_step0)))
+
         for step in range(steps):
             b = next(it)
-            ctx = program.batch_ctx(b)
-            t0 = time.time()
-            res = executor.run_step(
-                server_params, ctx, step=step, ema_state=ema_state,
-                collect_grads=(step == 0 and verify_step0),
-            )
-            if step == 0 and verify_step0:
-                if mode == "nowait" and res.report.total_misses > 0:
-                    # the §3 identity only holds at staleness 0: a step-0
-                    # deadline miss legitimately reroutes gradients through
-                    # the EMA imputation
-                    print_fn("step-0 verification skipped: "
-                             f"{res.report.total_misses} no-wait deadline "
-                             "miss(es) — gradients are intentionally "
-                             "imputed, not serial")
-                else:
-                    _verify_step0(res, program, tower_params, server_params,
-                                  program.features(b), ctx, M, verify_atol,
-                                  print_fn)
-                if program.has_aux:
-                    aux_bytes = res.ledger.bytes_with_tag("aux_loss")
-                    print_fn(f"router aux loss {float(res.aux):.6f} "
-                             "transported role0 -> role3 through the "
-                             f"protocol aux slot ({aux_bytes} B in ledger)")
-            server_params, opt_state = opt.update(
-                server_params, res.server_grads, opt_state)
-            ema_state = res.ema_state
-            report = res.report
-            loss = float(res.loss)
-            dt = time.time() - t0
-            metrics.log(step, loss, dt)
-            if step % log_every == 0 or step == steps - 1:
-                miss = res.report.total_misses if res.report else 0
-                print_fn(f"step {step:5d}  loss {loss:8.4f}  {dt*1e3:8.1f} ms"
-                         f"  [{transport}/{mode}"
-                         + (f" aux={float(res.aux):.4f}"
-                            if res.aux is not None else "")
-                         + (f" misses={miss}" if mode == "nowait" else "")
-                         + "]")
+            if step == 0:
+                b0 = b
+            pipeline.submit(step, program.batch_ctx(b))
+            if pipeline.inflight >= W:
+                collect_one()
+        while pipeline.inflight:  # drain the fill (steps < W included)
+            collect_one()
         final_towers = _collect_tower_params(tr)
     finally:
         tr.close()
+    if report is not None and hasattr(report, "staleness"):
+        # the drain-collected tail always has staleness 0; surface the
+        # run's actual delayed-gradient lag on the returned report
+        report.staleness = max_staleness
     return ({"towers": final_towers, "server": server_params},
             metrics, report)
 

@@ -33,11 +33,20 @@ Worker protocol (requests handled by :class:`TowerWorker`):
 
 * ``forward  {step, mb[, feats]}``        -> ``cut  {mb, cut}``
 * ``backward {step, mb, jac}``            -> ``grad {mb}`` (ack)
-* ``finish_step {step, microbatches, collect}`` -> ``step_done {grad?}``
-  (averages accumulated tower grads over M, applies the local optimizer
-  update when configured, returns the average iff ``collect``)
+* ``finish_step {step, microbatches, collect[, expected_jacs]}`` ->
+  ``step_done {grad?}`` (averages the step's accumulated tower grads over
+  M, applies the local optimizer update when configured, returns the
+  average iff ``collect``; with ``expected_jacs`` the update is deferred
+  until that many backwards for the step have landed — the completing
+  backward then returns the ``step_done``)
 * ``get_params {}``                       -> ``params {params}``
 * ``shutdown {}``                         -> ``bye {}``
+
+All per-step worker state is buffered BY STEP (param snapshot per step,
+per-step grad sums and pending features), so a cross-step driver
+(``runtime.pipeline.StepPipeline``) can interleave step t+1 forwards with
+step t backwards: at window W > 1 tower params train on delayed gradients,
+one optimizer update behind the submitted forward.
 """
 from repro.transport.base import SimTransport, TowerWorker, Transport
 from repro.transport.builders import (build_lm_worker, build_mlp_worker,

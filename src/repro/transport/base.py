@@ -52,6 +52,24 @@ class TowerWorker:
     where tower params never leave the client.  ``forward_delay_s``
     artificially slows this client's forwards: the wall-clock straggler
     scenario the no-wait deadlines exist for, injectable on any transport.
+
+    Cross-step pipelining (the executor's ``submit_step``/``collect_step``
+    halves driven at window W > 1) means step t+1 forwards arrive BEFORE
+    step t's jacobians, so all per-step state is buffered by step:
+
+    * forwards snapshot the params they ran under (``_step_params``) and
+      backwards linearize at that snapshot — the jacobian the server
+      returns was computed against the snapshot's cut, so linearizing at
+      post-update params would be inconsistent.  At W > 1 the snapshot is
+      one optimizer update behind the submitted forward (delayed-gradient
+      semantics); at W = 1 it IS the current params and nothing changes.
+    * gradient accumulators and pending features are per step, so
+      ``finish_step`` for step t cannot clobber step t+1's in-flight state.
+    * a ``finish_step`` carrying ``expected_jacs`` defers its optimizer
+      update until that many backwards for its step have actually landed
+      (FIFO transports always deliver jacobians first, but the protocol
+      stays safe for reordering backends); the deferred ``step_done`` is
+      returned by the completing backward.
     """
 
     def __init__(self, client_id: int, tower_fwd: Callable, tower_params, *,
@@ -65,8 +83,10 @@ class TowerWorker:
         self.forward_delay_s = forward_delay_s
         self.opt_state = optimizer.init(tower_params) if optimizer else None
         self._feats: dict = {}  # (step, mb) -> feats awaiting backward
-        self._grad_sum = None
-        self._step = None
+        self._step_params: dict = {}  # step -> params its forwards ran under
+        self._grad_sums: dict = {}  # step -> accumulated tower grads
+        self._jacs_seen: dict = {}  # step -> backwards processed
+        self._pending_finish: dict = {}  # step -> deferred finish request
 
     # -- ops ----------------------------------------------------------------
 
@@ -98,7 +118,8 @@ class TowerWorker:
             feats = self.feature_fn(step, mb)
         feats = jnp.asarray(feats)
         self._feats[(step, mb)] = feats
-        cut = self.tower_fwd(self.params, feats)
+        params = self._step_params.setdefault(step, self.params)
+        cut = self.tower_fwd(params, feats)
         return {"op": "cut", "client": self.client_id, "step": step,
                 "mb": mb, "cut": cut}
 
@@ -106,6 +127,10 @@ class TowerWorker:
         step, mb = request["step"], request["mb"]
         feats = self._feats.pop((step, mb))
         jac = jnp.asarray(request["jac"])
+        # linearize at the params this step's forwards ran under: the
+        # server's jacobian is w.r.t. THAT cut, and at W > 1 a later step's
+        # finish may already have moved self.params past the snapshot
+        base = self._step_params.get(step, self.params)
 
         def tower_obj(tp):
             return jnp.vdot(
@@ -113,31 +138,49 @@ class TowerWorker:
                 jac.astype(jnp.float32),
             )
 
-        grad = jax.grad(tower_obj)(self.params)
-        if self._grad_sum is None:
-            self._grad_sum = grad
-        else:
-            self._grad_sum = jax.tree_util.tree_map(
-                jnp.add, self._grad_sum, grad)
+        grad = jax.grad(tower_obj)(base)
+        prev = self._grad_sums.get(step)
+        self._grad_sums[step] = grad if prev is None else \
+            jax.tree_util.tree_map(jnp.add, prev, grad)
+        self._jacs_seen[step] = self._jacs_seen.get(step, 0) + 1
+        pending = self._pending_finish.get(step)
+        if pending is not None and \
+                self._jacs_seen[step] >= pending.get("expected_jacs", 0):
+            del self._pending_finish[step]
+            return self._complete_finish(pending)
         return {"op": "grad", "client": self.client_id, "step": step,
                 "mb": mb}
 
-    def _finish_step(self, request: dict) -> dict:
+    def _finish_step(self, request: dict) -> Optional[dict]:
+        step = request["step"]
+        expected = request.get("expected_jacs")
+        if expected is not None and self._jacs_seen.get(step, 0) < expected:
+            # jacobians for this step still in flight (a non-FIFO backend):
+            # defer the update; the completing backward returns step_done
+            self._pending_finish[step] = request
+            return None
+        return self._complete_finish(request)
+
+    def _complete_finish(self, request: dict) -> dict:
         step = request["step"]
         M = request.get("microbatches", 1)
         # microbatches whose jacobian never arrived (no-wait misses)
         # contribute zero — dividing the SUM by M reproduces the serial
         # path's zero-padded tree_mean exactly
-        if self._grad_sum is None:
+        grad_sum = self._grad_sums.pop(step, None)
+        if grad_sum is None:
             avg = jax.tree_util.tree_map(jnp.zeros_like, self.params)
         else:
-            avg = jax.tree_util.tree_map(lambda g: g / M, self._grad_sum)
+            avg = jax.tree_util.tree_map(lambda g: g / M, grad_sum)
         if self.optimizer is not None:
             self.params, self.opt_state = self.optimizer.update(
                 self.params, avg, self.opt_state)
-        self._grad_sum = None
-        self._feats.clear()
-        self._step = step
+        self._step_params.pop(step, None)
+        self._jacs_seen.pop(step, None)
+        # only THIS step's leftovers (no-wait misses); later steps' feats
+        # are awaiting their own jacobians
+        self._feats = {key: v for key, v in self._feats.items()
+                       if key[0] != step}
         return {"op": "step_done", "client": self.client_id, "step": step,
                 "grad": avg if request.get("collect") else None}
 

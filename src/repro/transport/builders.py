@@ -76,7 +76,12 @@ def build_split_worker(client_id: int, *, cfg, seed: int = 0, batch: int = 8,
     Reconstructs the full seeded init (cheap at these scales) and keeps
     only client ``client_id``'s tower partition.  With ``learning_rate``
     set, tower params train locally under the same AdamW schedule as the
-    server — they never leave this process.
+    server — they never leave this process.  The returned
+    :class:`~repro.transport.base.TowerWorker` buffers all per-step state
+    by step (param snapshots, grad sums, pending features), so it serves
+    cross-step pipelined drivers (``--inflight-steps W``) out of the box:
+    at W > 1 its params train on delayed gradients, one optimizer update
+    behind the submitted forward.
     """
     from repro.models import backbone, split_program
     from repro.optim import AdamW

@@ -249,6 +249,85 @@ def test_multiproc_loopback_matches_protocol_and_costs():
 
 
 # ---------------------------------------------------------------------------
+# worker cross-step buffering (delayed-gradient semantics at window W > 1)
+# ---------------------------------------------------------------------------
+
+def test_worker_out_of_order_step_buffering():
+    """The cross-step FIFO order — step t+1 forwards BEFORE step t's
+    backward/finish — must leave every step's state intact: step t+1 feats
+    survive finish_step(t), and step t+1's backward linearizes at the param
+    snapshot its forward ran under, not at the post-update params."""
+    from repro.transport.builders import _sgd
+
+    cfg = TINY
+    lr = 0.1
+    params = split_model.init_split_mlp(jax.random.PRNGKey(0), cfg)
+    p0 = params["towers"][0]
+    worker = TowerWorker(0, towers.mlp_tower_apply, p0,
+                         optimizer=_sgd(lr))
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    f0 = jax.random.normal(ks[0], (4, 8))
+    f1 = jax.random.normal(ks[1], (4, 8))
+    j0 = jax.random.normal(ks[2], (4, cfg.cut_dim))
+    j1 = jax.random.normal(ks[3], (4, cfg.cut_dim))
+
+    def grad_at(base, feats, jac):
+        return jax.grad(lambda tp: jnp.vdot(
+            towers.mlp_tower_apply(tp, feats).astype(jnp.float32),
+            jac.astype(jnp.float32)))(base)
+
+    r0 = worker.handle({"op": "forward", "step": 0, "mb": 0, "feats": f0})
+    # cross-step: step 1's forward arrives before step 0's backward and
+    # runs on the SAME (pre-update) params
+    r1 = worker.handle({"op": "forward", "step": 1, "mb": 0, "feats": f1})
+    np.testing.assert_array_equal(r1["cut"],
+                                  towers.mlp_tower_apply(p0, f1))
+    worker.handle({"op": "backward", "step": 0, "mb": 0, "jac": j0})
+    done0 = worker.handle({"op": "finish_step", "step": 0,
+                           "microbatches": 1, "collect": True,
+                           "expected_jacs": 1})
+    g0 = grad_at(p0, f0, j0)
+    _assert_trees_close(done0["grad"], g0, atol=1e-6)
+    p1 = jax.tree_util.tree_map(lambda p, g: p - lr * g, p0, g0)
+    _assert_trees_close(worker.params, p1, atol=1e-6)
+
+    # step 1's backward must linearize at p0 (its forward's snapshot) even
+    # though the worker's live params are already p1
+    resp = worker.handle({"op": "backward", "step": 1, "mb": 0, "jac": j1})
+    assert resp["op"] == "grad"
+    done1 = worker.handle({"op": "finish_step", "step": 1,
+                           "microbatches": 1, "collect": True,
+                           "expected_jacs": 1})
+    g1 = grad_at(p0, f1, j1)
+    _assert_trees_close(done1["grad"], g1, atol=1e-6)
+    # ...and the update applies to the CURRENT params (p1), not the snapshot
+    p2 = jax.tree_util.tree_map(lambda p, g: p - lr * g, p1, g1)
+    _assert_trees_close(worker.params, p2, atol=1e-6)
+    assert not worker._feats and not worker._step_params
+
+
+def test_worker_defers_finish_until_jacobians_land():
+    """A finish_step carrying expected_jacs > seen backwards defers the
+    optimizer update; the completing backward returns the step_done (a
+    non-FIFO transport can reorder the two without corrupting the step)."""
+    cfg = TINY
+    params = split_model.init_split_mlp(jax.random.PRNGKey(0), cfg)
+    worker = TowerWorker(0, towers.mlp_tower_apply, params["towers"][0])
+    f0 = jax.random.normal(jax.random.PRNGKey(1), (4, 8))
+    j0 = jax.random.normal(jax.random.PRNGKey(2), (4, cfg.cut_dim))
+
+    worker.handle({"op": "forward", "step": 0, "mb": 0, "feats": f0})
+    assert worker.handle({"op": "finish_step", "step": 0, "microbatches": 1,
+                          "collect": True, "expected_jacs": 1}) is None
+    resp = worker.handle({"op": "backward", "step": 0, "mb": 0, "jac": j0})
+    assert resp["op"] == "step_done" and resp["step"] == 0
+    g0 = jax.grad(lambda tp: jnp.vdot(
+        towers.mlp_tower_apply(tp, f0).astype(jnp.float32),
+        j0.astype(jnp.float32)))(params["towers"][0])
+    _assert_trees_close(resp["grad"], g0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
 # adaptive deadline controller
 # ---------------------------------------------------------------------------
 
@@ -275,6 +354,119 @@ def test_adaptive_deadline_tightens_and_recovers():
     assert d_loose >= 0.4  # the recovered client now fits the window
     # never beyond the staleness ceiling
     assert d_loose <= ctl.ceiling_frac * 1.0
+
+
+def test_nowait_busy_server_clamps_deadline_observations():
+    """Satellite fix: a cut swept from the queue AFTER the deadline window
+    expired (or while role 0 was busy on an earlier microbatch) is observed
+    at its DRAIN time, which can include arbitrary server stall — the
+    observation must be clamped to the deadline window so a busy role 0
+    cannot inflate the arrival EWMAs and loosen the deadline for no client
+    reason."""
+    import time as _time
+
+    cfg = TINY3
+    params, feats, y, loss_fn = _setup(cfg)
+    slept = []
+
+    def slow_loss(logits, labels):
+        # role 0 stalls 1.2s on microbatch 0 only — every mb-1 cut is
+        # delivered to the queue during the stall and drained late
+        if not slept:
+            slept.append(True)
+            _time.sleep(1.2)
+        return loss_fn(logits, labels)
+
+    # staggered but all comfortably inside the window — including its FLOOR
+    # (floor_frac * initial = 0.175s), since the healthy cluster's small
+    # spreads tighten the adaptive window there immediately
+    delays = [0.0, 0.05, 0.1]
+    for k in range(cfg.num_clients):  # pre-trace so sleeps dominate timing
+        towers.mlp_tower_apply(params["towers"][k], feats[k][:8])
+    workers = [
+        TowerWorker(k, towers.mlp_tower_apply, params["towers"][k],
+                    forward_delay_s=delays[k])
+        for k in range(cfg.num_clients)
+    ]
+    ctl = AdaptiveDeadline(cfg.num_clients, initial_s=0.35)
+    with InprocTransport(workers) as tr:
+        executor = Executor(tr, towers.mlp_tower_apply, slow_loss, cfg.merge,
+                            mode="nowait", microbatches=2, deadline=ctl)
+        res = executor.run_step(params["server"], y, features=feats)
+
+    assert res.report.misses_per_client == [0, 0, 0], res.report
+    # without the clamp, client 1/2's mb-1 observations would be ~>1s
+    # (drain time after the stall); with it every EWMA stays within the
+    # window the cuts actually beat
+    for spread in ctl.spreads():
+        assert spread is not None and spread <= 0.35 + 1e-6, ctl.spreads()
+
+
+def test_nowait_recovered_straggler_rejoins_merges():
+    """Late-arrival loosening end-to-end: a straggler missing the window
+    still has its (late) arrivals observed — raw, unclamped — so when it
+    recovers, its decaying EWMA re-enters the healthy set and it starts
+    making merges again instead of being imputed forever."""
+    cfg = TINY3
+    params, feats, y, loss_fn = _setup(cfg)
+    delay = 0.8
+    for k in range(cfg.num_clients):  # pre-trace so sleeps dominate timing
+        towers.mlp_tower_apply(params["towers"][k], feats[k])
+    workers = [
+        TowerWorker(k, towers.mlp_tower_apply, params["towers"][k],
+                    forward_delay_s=delay if k == 2 else 0.0)
+        for k in range(cfg.num_clients)
+    ]
+    ctl = AdaptiveDeadline(cfg.num_clients, initial_s=0.2, decay=0.3)
+    with InprocTransport(workers) as tr:
+        executor = Executor(tr, towers.mlp_tower_apply, loss_fn, cfg.merge,
+                            mode="nowait", microbatches=1, deadline=ctl)
+        ema_state = None
+        sick_misses = 0
+        for step in range(3):
+            res = executor.run_step(params["server"], y, step=step,
+                                    features=feats, ema_state=ema_state,
+                                    collect_grads=False)
+            ema_state = res.ema_state
+            sick_misses += res.report.misses_per_client[2]
+        assert sick_misses >= 2  # it really was missing merges
+        # the late cuts were observed raw: the EWMA reflects true lateness
+        assert ctl.spreads()[2] > 0.3
+        # straggler recovers
+        workers[2].forward_delay_s = 0.0
+        healed_misses = 0
+        for step in range(3, 8):
+            res = executor.run_step(params["server"], y, step=step,
+                                    features=feats, ema_state=ema_state,
+                                    collect_grads=False)
+            ema_state = res.ema_state
+            healed_misses += res.report.misses_per_client[2]
+        assert res.report.misses_per_client[2] == 0  # back in the merge
+        assert healed_misses <= 3  # rejoined within a few steps
+
+
+def test_adaptive_deadline_late_arrival_loosens_window():
+    """Controller-level late-arrival loosening: a recovered straggler's
+    moderate spreads must re-open the deadline window far enough to cover
+    it (the loosening direction of the EWMA policy)."""
+    ctl = AdaptiveDeadline(3, initial_s=0.8, decay=0.5)
+    # healthy start: window tightens toward the floor
+    for _ in range(6):
+        for k in range(3):
+            ctl.observe(k, 0.01)
+    tight = ctl.deadline_s()
+    assert tight < 0.8
+    # client 2 turns into a moderate laggard (late arrivals observed after
+    # its merges are missed); its EWMA stays within the healthy cut so the
+    # window must LOOSEN to cover it again
+    for _ in range(10):
+        ctl.observe(0, 0.01)
+        ctl.observe(1, 0.012)
+        ctl.observe(2, 0.3)
+    loose = ctl.deadline_s()
+    assert loose > tight
+    assert loose >= 0.3  # the window re-opened over the laggard
+    assert loose <= ctl.ceiling_frac * 0.8
 
 
 def test_adaptive_deadline_seed_from_observations():
