@@ -159,7 +159,10 @@ def bench_split_exec(out: dict) -> None:
     clients) trains real steps through the Executor over InprocTransport.
     The per-family trajectory is the comparison baseline for future PRs —
     moe rows include the router aux loss riding the protocol's role-0 ->
-    role-3 slot."""
+    role-3 slot, and the sum/avg-merge exemplars (dense, moe) carry a
+    secure-aggregation overhead column: the same steps with masked cut
+    uplinks (source masking + masked merge) plus the one-time key-exchange
+    bytes, vs the plain run."""
     import jax
     import jax.numpy as jnp
 
@@ -181,19 +184,26 @@ def bench_split_exec(out: dict) -> None:
         b = {k: jnp.asarray(v) for k, v in loader.next_batch().items()}
         feats, ctx = program.features(b), program.batch_ctx(b)
 
-        workers = [TowerWorker(k, program.tower_fwd(k), towers_p[k])
-                   for k in range(program.num_clients)]
-        with InprocTransport(workers) as tr:
-            executor = Executor(tr, program.server_fwd, program.loss_fn,
-                                program.merge, mode="pipelined",
-                                microbatches=1, **program.executor_kwargs)
-            res = executor.run_step(server_p, ctx, features=feats,
-                                    collect_grads=False)  # warm / compile
-            t0 = time.time()
-            for step in range(1, reps + 1):
-                res = executor.run_step(server_p, ctx, step=step,
-                                        features=feats, collect_grads=False)
-            dt = (time.time() - t0) / reps
+        def timed_run(secure: bool):
+            workers = [TowerWorker(k, program.tower_fwd(k), towers_p[k])
+                       for k in range(program.num_clients)]
+            with InprocTransport(workers) as tr:
+                executor = Executor(tr, program.server_fwd, program.loss_fn,
+                                    program.merge, mode="pipelined",
+                                    microbatches=1, secure_agg=secure,
+                                    **program.executor_kwargs)
+                if secure:
+                    executor.setup_secure()
+                res = executor.run_step(server_p, ctx, features=feats,
+                                        collect_grads=False)  # warm/compile
+                t0 = time.time()
+                for step in range(1, reps + 1):
+                    res = executor.run_step(server_p, ctx, step=step,
+                                            features=feats,
+                                            collect_grads=False)
+                return (time.time() - t0) / reps, res, executor
+
+        dt, res, _ = timed_run(secure=False)
         row = {
             "family": cfg.family, "arch": cfg.name,
             "step_time_ms": dt * 1e3,
@@ -201,6 +211,19 @@ def bench_split_exec(out: dict) -> None:
         }
         if res.aux is not None:
             row["aux_loss"] = float(res.aux)
+        # secure-agg overhead column for the sum/avg-merge exemplars
+        if cfg.family in ("dense", "moe"):
+            sec_dt, sec_res, sec_exec = timed_run(secure=True)
+            row.update({
+                "secure_step_time_ms": sec_dt * 1e3,
+                "secure_overhead_x": sec_dt / dt,
+                "secure_cut_bytes_per_client":
+                    sec_res.report.cut_bytes_per_client,
+                "key_exchange_bytes": sec_exec.keyx_ledger.total(),
+            })
+            _emit(f"split_exec/{cfg.family}_secure", sec_dt * 1e6,
+                  f"{sec_dt / dt:.2f}x_vs_plain "
+                  f"keyx={sec_exec.keyx_ledger.total()}B")
         rows.append(row)
         _emit(f"split_exec/{cfg.family}", dt * 1e6,
               f"{cfg.name} inproc K={program.num_clients}")

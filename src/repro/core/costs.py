@@ -55,6 +55,42 @@ def split_mlp_flops_per_sample(cfg: MLPSplitConfig) -> int:
     return total
 
 
+def key_exchange_bytes(num_clients: int, group_bytes: int = 0) -> dict:
+    """Byte model of secure aggregation's ONE-TIME pairwise key-agreement
+    round (``repro.core.secure_agg``), cross-checked against the executor's
+    ``keyx_pub[k]`` / ``keyx_bcast[k]`` ledger tags in tests.
+
+    Each client uplinks one fixed-size public group element; role 0 relays
+    the full K-entry directory back down every downlink.  Seeds are derived
+    per ordered pair AT the clients — role 0 only ever moves public values.
+    ``group_bytes=0`` reads the wire size from
+    ``secure_agg.KEYX_GROUP_BYTES``.
+    """
+    if not group_bytes:
+        from repro.core.secure_agg import KEYX_GROUP_BYTES
+
+        group_bytes = KEYX_GROUP_BYTES
+    pub = group_bytes
+    bcast = num_clients * group_bytes
+    return {
+        "pub_bytes_per_client": pub,
+        "bcast_bytes_per_client": bcast,
+        "role0_received": num_clients * pub,
+        "role0_sent": num_clients * bcast,
+        "total": num_clients * (pub + bcast),
+    }
+
+
+def masked_cut_bytes(batch_size: int, cut_dim: int) -> int:
+    """Bytes of one MASKED cut uplink per client per (micro)batch: masks
+    are additive float32 noise, so a masked uplink is exactly the f32 cut
+    payload — zero byte overhead over a plain f32 cut (sub-f32 payload
+    dtypes are widened to f32 by the masking).  The per-step secure-agg
+    traffic overhead is therefore the amortized one-time
+    :func:`key_exchange_bytes` only."""
+    return batch_size * cut_dim * 4
+
+
 def aux_exchange_bytes(microbatches: int, itemsize: int = 4) -> int:
     """Bytes of the role-0 -> role-3 auxiliary-loss slot per step: one f32
     scalar per microbatch (families whose server network computes its own

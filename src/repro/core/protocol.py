@@ -40,12 +40,20 @@ class Ledger:
     messages: list[Message] = field(default_factory=list)
 
     def record(self, sender: str, receiver: str, tag: str, array) -> None:
-        self.messages.append(
-            Message(sender, receiver, tag, array.size * array.dtype.itemsize)
-        )
+        self.record_bytes(sender, receiver, tag,
+                          array.size * array.dtype.itemsize)
+
+    def record_bytes(self, sender: str, receiver: str, tag: str,
+                     num_bytes: int) -> None:
+        """Record a non-array payload of known wire size (the key-exchange
+        group elements are fixed-size integers, not tensors)."""
+        self.messages.append(Message(sender, receiver, tag, num_bytes))
 
     def record_spec(self, spec: "MessageSpec", array) -> None:
         self.record(spec.sender, spec.receiver, spec.tag, array)
+
+    def record_spec_bytes(self, spec: "MessageSpec", num_bytes: int) -> None:
+        self.record_bytes(spec.sender, spec.receiver, spec.tag, num_bytes)
 
     def sent_by(self, who: str) -> int:
         return sum(m.num_bytes for m in self.messages if m.sender == who)
@@ -72,44 +80,72 @@ def _role_of(client: int, label_holder: int) -> str:
 @dataclass(frozen=True)
 class MessageSpec:
     """One protocol message, independent of any payload: who sends what to
-    whom.  ``client`` is the feature-holder index for cut/jac messages and
-    None for the role-0 <-> role-3 loss exchange."""
+    whom.  ``client`` is the feature-holder index for cut/jac/key-exchange
+    messages and None for the role-0 <-> role-3 loss exchange."""
 
     sender: str
     receiver: str
     tag: str
-    kind: str  # "cut" | "head_out" | "aux" | "head_jac" | "jac"
+    # "cut" | "masked_cut" | "head_out" | "aux" | "head_jac" | "jac"
+    # | "keyx_pub" | "keyx_bcast"
+    kind: str
     client: Optional[int] = None
 
 
 @dataclass(frozen=True)
 class StepSchedule:
-    """The per-step message schedule: K cut uplinks, the head/loss exchange
-    (with its auxiliary-loss slot), K jacobian downlinks.  Serial execution
-    walks it in order; the pipelined runtime issues the same messages per
-    microbatch, overlapped.
+    """THE message schedule, in five message classes: the one-time pairwise
+    key exchange, K (optionally masked) cut uplinks, the role-0 <-> role-3
+    head/loss exchange (with its auxiliary-loss slot), and K jacobian
+    downlinks.  Serial execution walks the per-step classes in order; the
+    pipelined runtime issues the same messages per microbatch, overlapped.
 
     ``aux`` is the role-0 -> role-3 auxiliary-loss slot: families whose
     server network computes a loss term of its own (the moe router
     load-balance loss) ship that scalar alongside the head output so role 3
     folds it into the training loss.  The slot is always part of the
     schedule definition; a message is only recorded (and costed) when the
-    family's SplitProgram declares an aux term."""
+    family's SplitProgram declares an aux term.
+
+    ``key_pubs`` / ``key_bcasts`` are the one-time key-agreement round of
+    secure aggregation (``repro.core.secure_agg``): each client uplinks its
+    fixed-size public value, role 0 relays the full directory back down and
+    every ordered pair derives a shared mask seed role 0 never holds.  Like
+    the aux slot the specs are always part of the definition; they are only
+    recorded (and costed) when the schedule is built with ``secure=True``,
+    in which case the cut uplinks carry the ``masked_cut`` kind — role 0
+    observes mask-blinded activations and only their sum is meaningful."""
 
     cuts: tuple[MessageSpec, ...]
     head_out: MessageSpec
     aux: MessageSpec
     head_jac: MessageSpec
     jacs: tuple[MessageSpec, ...]
+    key_pubs: tuple[MessageSpec, ...] = ()
+    key_bcasts: tuple[MessageSpec, ...] = ()
+    secure: bool = False
 
 
-def step_schedule(num_clients: int, label_holder: int = 0) -> StepSchedule:
+def step_schedule(num_clients: int, label_holder: int = 0, *,
+                  secure: bool = False) -> StepSchedule:
+    cut_kind = "masked_cut" if secure else "cut"
     cuts = tuple(
-        MessageSpec(_role_of(k, label_holder), "role0", f"cut[{k}]", "cut", k)
+        MessageSpec(_role_of(k, label_holder), "role0",
+                    f"{cut_kind}[{k}]", cut_kind, k)
         for k in range(num_clients)
     )
     jacs = tuple(
         MessageSpec("role0", _role_of(k, label_holder), f"jac[{k}]", "jac", k)
+        for k in range(num_clients)
+    )
+    key_pubs = tuple(
+        MessageSpec(_role_of(k, label_holder), "role0", f"keyx_pub[{k}]",
+                    "keyx_pub", k)
+        for k in range(num_clients)
+    )
+    key_bcasts = tuple(
+        MessageSpec("role0", _role_of(k, label_holder), f"keyx_bcast[{k}]",
+                    "keyx_bcast", k)
         for k in range(num_clients)
     )
     return StepSchedule(
@@ -118,6 +154,9 @@ def step_schedule(num_clients: int, label_holder: int = 0) -> StepSchedule:
         aux=MessageSpec("role0", "role3", "aux_loss", "aux"),
         head_jac=MessageSpec("role3", "role0", "head_jacobian", "head_jac"),
         jacs=jacs,
+        key_pubs=key_pubs,
+        key_bcasts=key_bcasts,
+        secure=secure,
     )
 
 

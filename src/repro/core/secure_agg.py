@@ -6,22 +6,102 @@ honest-but-curious, no-dropout-recovery case the paper cites):
 * every ordered client pair (i < j) agrees on a seed ``s_ij``;
 * client i adds  ``+PRG(s_ij)`` for every j > i and ``-PRG(s_ji)`` for every
   j < i to its cut activation before sending;
-* the pairwise masks cancel exactly in the sum, so the server learns only
-  the aggregate — never an individual client's cut activation.
+* the pairwise masks cancel in the sum, so the server learns only the
+  aggregate — never an individual client's cut activation.
 
-The PRG is ``jax.random`` (threefry) rather than a cryptographic PRF —
-the *protocol arithmetic* is what we implement and test, per DESIGN.md §2.
-Masks live in float32; cancellation is exact because each mask value is
-added and subtracted once as the identical f32 number.
+Two ways the per-pair seeds come to exist:
+
+* **centralized** (simulation/tests): :func:`pair_seed` folds a shared
+  ``base_seed`` — every party, including a hypothetical server, could
+  regenerate the masks.  Convenient for asserting the arithmetic, useless
+  as a privacy mechanism.
+* **in-protocol** (the transports): each client draws an ephemeral
+  Diffie-Hellman keypair (:func:`dh_keypair`), role 0 relays the fixed-size
+  public group elements (``KEYX_GROUP_BYTES`` each), and each pair derives
+  its shared seed locally (:func:`dh_shared` -> :func:`seed_from_shared`).
+  Role 0 forwards public values only; it never holds any pair's seed.
+
+Threat model
+------------
+* **role 0 is honest-but-curious**: it runs the protocol faithfully but
+  inspects everything it receives.  Under masking it observes the public
+  key-exchange values and per-client *masked* cut activations; only the
+  K-client sum (the merge input) is recoverable from them.
+* **clients do not collude** with role 0 or each other; each pair's seed is
+  known to exactly that pair.
+* **no dropout recovery**: if a client's masked cut misses a merge, its
+  pairwise masks do not cancel and the aggregate is garbage.  There is no
+  Shamir-share unmasking round — secure aggregation therefore requires
+  barrier execution, enforced at ``Executor`` construction (no ``nowait``
+  mode, no EMA imputation).
+
+The PRG is ``jax.random`` (threefry) rather than a cryptographic PRF, and
+the DH group is a placeholder (the Mersenne prime 2^521 - 1, generator 3)
+rather than a vetted production group — the *protocol arithmetic and message
+flow* are what we implement and test, per DESIGN.md §2.
+
+Masks live in float32; cancellation is NOT exact.  Each mask value is added
+and subtracted once as the identical f32 number, but the two occurrences
+interleave with different payloads in the sum, so the aggregate carries an
+ulp-level rounding residue that grows with the mask ``scale``, the client
+count and the payload magnitude.  :func:`cancellation_bound` states the
+scale-dependent bound and :func:`secure_sum` asserts it (tests observe it
+as the ``rtol=1e-4``-level tolerance on the aggregate).
+
+Mask freshness: ``round_idx`` is REQUIRED everywhere.  Reusing a round
+index reuses the identical masks, and a server differencing two uplinks
+masked for the same round recovers the raw payload delta exactly — the
+executor path derives a fresh ``round_idx = step * microbatches + mb`` per
+``(step, microbatch)``.
 """
 from __future__ import annotations
+
+import hashlib
+import math
+import secrets
 
 import jax
 import jax.numpy as jnp
 
+# placeholder DH group (see module docstring): the multiplicative group mod
+# the Mersenne prime M521.  Public values are fixed-size group elements.
+DH_PRIME = (1 << 521) - 1
+DH_GENERATOR = 3
+KEYX_GROUP_BYTES = 66  # ceil(521 / 8): wire size of one public value
+_DH_SECRET_BITS = 512
 
-def pair_seed(base_seed: int, i: int, j: int, round_idx: int = 0) -> jax.Array:
-    """Deterministic per-pair, per-round seed (i < j canonical order)."""
+
+def dh_keypair() -> tuple[int, int]:
+    """Ephemeral (secret, public) pair for the in-protocol key exchange."""
+    secret = secrets.randbits(_DH_SECRET_BITS) | 1
+    return secret, pow(DH_GENERATOR, secret, DH_PRIME)
+
+
+def dh_shared(secret: int, peer_pub: int) -> int:
+    """The pair's shared group element: ``peer_pub ** secret`` — symmetric,
+    and never computable by role 0 (which only relays public values)."""
+    peer_pub = int(peer_pub)
+    if not 1 < peer_pub < DH_PRIME:
+        raise ValueError(f"peer public value outside the group: {peer_pub}")
+    return pow(peer_pub, secret, DH_PRIME)
+
+
+def seed_from_shared(shared: int) -> jax.Array:
+    """Deterministic PRNG key from a DH shared secret (both pair ends derive
+    the identical key, so the +/- masks cancel)."""
+    digest = hashlib.sha256(
+        int(shared).to_bytes(KEYX_GROUP_BYTES, "big")).digest()
+    w0 = int.from_bytes(digest[:4], "big")
+    w1 = int.from_bytes(digest[4:8], "big")
+    return jax.random.fold_in(jax.random.PRNGKey(w0), w1)
+
+
+def pair_seed(base_seed: int, i: int, j: int, round_idx: int) -> jax.Array:
+    """Deterministic per-pair, per-round seed (i < j canonical order) —
+    the CENTRALIZED path; transports derive pair keys via ``dh_*``.
+
+    ``round_idx`` is required: reusing a round reuses the identical masks
+    (see module docstring on mask freshness)."""
     lo, hi = (i, j) if i < j else (j, i)
     return jax.random.fold_in(
         jax.random.fold_in(
@@ -31,39 +111,76 @@ def pair_seed(base_seed: int, i: int, j: int, round_idx: int = 0) -> jax.Array:
     )
 
 
-def client_mask(
-    base_seed: int, client: int, num_clients: int, shape, round_idx: int = 0,
-    scale: float = 1.0,
-) -> jnp.ndarray:
-    """The net mask client ``client`` adds to its payload."""
+def mask_from_keys(pair_keys: dict, client: int, shape, round_idx: int,
+                   scale: float = 1.0) -> jnp.ndarray:
+    """The net mask for ``client`` given its per-pair keys ``{other: key}``
+    (the in-protocol path: keys come from the DH exchange).  Fresh noise per
+    ``round_idx``; sign follows the canonical pair order."""
     mask = jnp.zeros(shape, jnp.float32)
-    for other in range(num_clients):
-        if other == client:
-            continue
-        key = pair_seed(base_seed, client, other, round_idx)
+    for other in sorted(pair_keys):
+        key = jax.random.fold_in(pair_keys[other], round_idx)
         noise = jax.random.normal(key, shape, jnp.float32) * scale
         mask = mask + noise if client < other else mask - noise
     return mask
 
 
+def client_mask(
+    base_seed: int, client: int, num_clients: int, shape, round_idx: int,
+    scale: float = 1.0,
+) -> jnp.ndarray:
+    """The net mask client ``client`` adds to its payload (centralized)."""
+    keys = {
+        other: pair_seed(base_seed, client, other, round_idx)
+        for other in range(num_clients) if other != client
+    }
+    # round_idx is already folded into pair_seed; fold 0 in mask_from_keys
+    return mask_from_keys(keys, client, shape, 0, scale)
+
+
 def mask_payload(
     payload: jnp.ndarray, base_seed: int, client: int, num_clients: int,
-    round_idx: int = 0, scale: float = 1.0,
+    round_idx: int, scale: float = 1.0,
 ) -> jnp.ndarray:
-    """What client ``client`` actually transmits."""
-    m = client_mask(base_seed, client, num_clients, payload.shape, round_idx, scale)
+    """What client ``client`` actually transmits (centralized seeds)."""
+    m = client_mask(base_seed, client, num_clients, payload.shape, round_idx,
+                    scale)
     return payload.astype(jnp.float32) + m
+
+
+def mask_payload_with_keys(
+    payload: jnp.ndarray, pair_keys: dict, client: int, round_idx: int,
+    scale: float = 1.0,
+) -> jnp.ndarray:
+    """What a transport worker actually transmits (DH-derived pair keys)."""
+    m = mask_from_keys(pair_keys, client, payload.shape, round_idx, scale)
+    return payload.astype(jnp.float32) + m
+
+
+def cancellation_bound(num_clients: int, scale: float = 1.0,
+                       payload_abs: float = 1.0) -> float:
+    """Upper bound on ``max|secure_sum - raw_sum|`` per element.
+
+    2*K*(K-1) mask terms of magnitude ~4*scale (4-sigma of the normal PRG)
+    enter the f32 sum interleaved with K payload terms; each partial sum is
+    O(scale*sqrt(K) + payload_abs) and every add rounds at eps.  The factor
+    8 is slack over the expected sqrt-accumulation."""
+    terms = 2 * num_clients * max(num_clients - 1, 1)
+    magnitude = 4.0 * scale * math.sqrt(num_clients) + payload_abs
+    eps = float(jnp.finfo(jnp.float32).eps)
+    return 8.0 * terms * eps * magnitude
 
 
 def secure_sum(
     payloads: jnp.ndarray,  # (K, ...) true client payloads
     base_seed: int,
-    round_idx: int = 0,
+    round_idx: int,
     scale: float = 1.0,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Run the protocol; returns (aggregate, masked_payloads).
+    """Run the centralized protocol; returns (aggregate, masked_payloads).
 
-    ``aggregate`` equals ``payloads.sum(0)`` exactly (mask cancellation);
+    ``aggregate`` equals ``payloads.sum(0)`` to within
+    :func:`cancellation_bound` (asserted here — the f32 mask cancellation
+    leaves an ulp-level, scale-dependent residue, NOT an exact zero);
     ``masked_payloads`` is what the server observes per client.
     """
     K = payloads.shape[0]
@@ -73,4 +190,14 @@ def secure_sum(
             for k in range(K)
         ]
     )
-    return jnp.sum(masked, axis=0), masked
+    agg = jnp.sum(masked, axis=0)
+    raw = jnp.sum(payloads.astype(jnp.float32), axis=0)
+    bound = cancellation_bound(
+        K, scale, max(float(jnp.max(jnp.abs(payloads))), 1.0))
+    residual = float(jnp.max(jnp.abs(agg - raw)))
+    if residual > bound:  # a raise, not an assert: must survive python -O
+        raise ValueError(
+            f"mask cancellation residue {residual:.3e} exceeds the "
+            f"documented bound {bound:.3e} (K={K}, scale={scale}) — the "
+            "masks did not cancel (mismatched round indices or seeds?)")
+    return agg, masked

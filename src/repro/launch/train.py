@@ -41,6 +41,14 @@ Examples:
   PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \\
       --steps 20 --transport inproc --inflight-steps 2
 
+  # SECURE AGGREGATION over real processes: one-time in-protocol key
+  # exchange, then every worker masks its cut uplink at the source
+  # (Bonawitz-style pairwise masks, repro.core.secure_agg) so role 0 only
+  # ever observes the aggregate; step 0 verifies the masked merge against
+  # the unmasked serial protocol_step:
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \\
+      --steps 5 --batch 4 --seq 64 --transport multiproc --secure-agg
+
   # split execution is family-agnostic (repro.models.split_program): moe
   # ships its router aux loss through the protocol's role-0 -> role-3 aux
   # slot, audio trains mel-band encoder towers, vlm by-source modality
@@ -188,6 +196,12 @@ def main(argv=None):
                          "clock; inproc/multiproc: SPLIT EXECUTION through "
                          "the Executor over per-role threads/processes "
                          "(repro.transport)")
+    ap.add_argument("--secure-agg", action="store_true",
+                    help="Bonawitz-style secure aggregation: in-protocol "
+                         "pairwise key exchange, cut uplinks masked at the "
+                         "source, role 0 merges masked cuts and never "
+                         "observes a raw activation (sum/avg merges, "
+                         "barrier runtimes, split execution only)")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -207,12 +221,29 @@ def main(argv=None):
 
     if cfg.vertical is None and (args.runtime != "serial"
                                  or args.straggler is not None
-                                 or args.transport != "sim"):
+                                 or args.transport != "sim"
+                                 or args.secure_agg):
         raise SystemExit(
-            f"--runtime {args.runtime}/--straggler/--transport need a "
-            "vertical config; this run is centralized (--vertical off or "
-            "arch without one)"
+            f"--runtime {args.runtime}/--straggler/--transport/--secure-agg "
+            "need a vertical config; this run is centralized (--vertical "
+            "off or arch without one)"
         )
+    if args.secure_agg:
+        if args.transport == "sim":
+            raise SystemExit(
+                "--secure-agg needs split execution (--transport "
+                "inproc/multiproc): the sim path runs the monolithic "
+                "jitted step, there is no uplink to mask")
+        if args.runtime == "nowait":
+            raise SystemExit(
+                "--secure-agg cannot run with --runtime nowait: a "
+                "deadline-dropped client's pairwise masks do not cancel "
+                "(no dropout-recovery round)")
+        try:
+            cfg = cfg.with_vertical(dataclasses.replace(
+                cfg.vertical, secure_aggregation=True))
+        except ValueError as e:  # non-additive merge rejected by the config
+            raise SystemExit(f"--secure-agg: {e}")
     if args.transport != "sim":
         # every family has a registered SplitProgram — this only rejects a
         # config with no vertical section (checked above) or an unknown
@@ -261,7 +292,8 @@ def main(argv=None):
         summary = metrics.summary()
         summary.update(arch=cfg.name, params=n_params, steps=args.steps,
                        vertical=args.vertical, transport=args.transport,
-                       inflight_steps=args.inflight_steps)
+                       inflight_steps=args.inflight_steps,
+                       secure_agg=args.secure_agg)
         if report is not None:
             summary["runtime"] = {
                 "mode": report.mode,

@@ -64,10 +64,23 @@ class StepPlan:
     cut_elements: int = 0  # per client per microbatch (for collective model)
     bytes_per_elt: int = 4
     label_holder: int = 0
+    # secure aggregation: bytes of ONE public key-exchange group element
+    # (costs.key_exchange_bytes); > 0 clocks the one-time setup round —
+    # every client uplinks its public value, role 0 relays the K-entry
+    # directory back down, and only then do the step-0 forwards start
+    keyx_bytes: int = 0
+
+
+def _keyx_bytes(secure: bool) -> int:
+    if not secure:
+        return 0
+    from repro.core.secure_agg import KEYX_GROUP_BYTES
+
+    return KEYX_GROUP_BYTES
 
 
 def plan_step(cfg: MLPSplitConfig, batch_size: int, microbatches: int = 1,
-              *, bytes_per_elt: int = 4) -> StepPlan:
+              *, bytes_per_elt: int = 4, secure: bool = False) -> StepPlan:
     """Build a :class:`StepPlan` from the paper-MLP config using the same
     analytic FLOP model as repro.core.costs (Tables 5 & 6)."""
     if batch_size % microbatches:
@@ -92,11 +105,13 @@ def plan_step(cfg: MLPSplitConfig, batch_size: int, microbatches: int = 1,
         merge=cfg.merge,
         cut_elements=mb * cfg.cut_dim,
         bytes_per_elt=bytes_per_elt,
+        keyx_bytes=_keyx_bytes(secure),
     )
 
 
 def plan_from_arch(cfg, batch_size: int, seq_len: int, microbatches: int = 1,
-                   *, bytes_per_elt: int = 4) -> StepPlan:
+                   *, bytes_per_elt: int = 4,
+                   secure: Optional[bool] = None) -> StepPlan:
     """StepPlan for a vertically-split LM arch (repro.configs.base.ArchConfig).
 
     Towers are ``tower_layers`` transformer blocks at width d_model/K; the
@@ -104,10 +119,13 @@ def plan_from_arch(cfg, batch_size: int, seq_len: int, microbatches: int = 1,
     standard 2*(4 d^2 + 2 d d_ff) dense estimate.  The role-3 exchange is
     modeled at per-token-loss granularity (not full-vocab logits): the
     label holder returns loss jacobian summaries, labels ship out of band.
+    ``secure=None`` reads ``cfg.vertical.secure_aggregation``.
     """
     v = cfg.vertical
     if v is None:
         raise ValueError(f"{cfg.name} has no vertical config")
+    if secure is None:
+        secure = v.secure_aggregation
     if batch_size % microbatches:
         raise ValueError(f"batch {batch_size} not divisible by M={microbatches}")
     K = v.num_clients
@@ -134,6 +152,7 @@ def plan_from_arch(cfg, batch_size: int, seq_len: int, microbatches: int = 1,
         merge=v.merge,
         cut_elements=tokens * d_t,
         bytes_per_elt=bytes_per_elt,
+        keyx_bytes=_keyx_bytes(secure),
     )
 
 
@@ -195,8 +214,18 @@ def simulate_serial(plan: StepPlan, link: LinkModel, *,
     before the next begins, clients one after another, full batch at once
     (so per-microbatch quantities scale by M but each link pays its latency
     once per message, not once per microbatch).  Steps never overlap, so
-    ``steps`` just scales the makespan."""
+    ``steps`` just scales the makespan — except the secure-aggregation key
+    exchange (``plan.keyx_bytes`` > 0), a ONE-TIME setup round paid before
+    step 0 and amortized into ``step_time_s`` over ``steps``."""
     M, K = plan.microbatches, plan.num_clients
+    setup = 0.0
+    if plan.keyx_bytes:
+        # serial key exchange: role 0 gathers every public value, then
+        # relays the K-entry directory down each link, one after another
+        for k in range(K):
+            setup += link.transfer_s(k, plan.keyx_bytes)
+        for k in range(K):
+            setup += link.transfer_s(k, K * plan.keyx_bytes)
     t = 0.0
     for k in range(K):
         t += link.client_compute_s(k, plan.tower_fwd_flops[k] * M)
@@ -208,8 +237,8 @@ def simulate_serial(plan: StepPlan, link: LinkModel, *,
         t += link.transfer_s(k, plan.cut_bytes * M)
         t += link.client_compute_s(k, plan.tower_bwd_flops[k] * M)
     report = _report_skeleton(plan, "serial", steps)
-    report.step_time_s = t
-    report.total_time_s = t * steps
+    report.total_time_s = t * steps + setup
+    report.step_time_s = report.total_time_s / steps
     report.server_busy_s = link.server_compute_s(plan.server_flops * M) * steps
     return report
 
@@ -242,6 +271,13 @@ def simulate_pipelined(
     :class:`~repro.runtime.deadline.AdaptiveDeadline` — seeded with
     ``default_deadline_s`` and fed every arrival's spread behind its
     microbatch's first cut — tightens/loosens the window online.
+
+    Secure aggregation (``plan.keyx_bytes`` > 0): the one-time key-exchange
+    setup round is clocked before any forward — every client uplinks its
+    public value, role 0 waits for all K, then relays the K-entry directory
+    down each client's downlink; client k's step-0 forwards start when its
+    directory lands.  Later steps pay nothing (the window W overlap is
+    unaffected); the cost is amortized into ``step_time_s`` over ``steps``.
     """
     if mode not in ("pipelined", "nowait"):
         raise ValueError(f"mode must be pipelined|nowait, got {mode!r}")
@@ -422,8 +458,31 @@ def simulate_pipelined(
             for k in fwd_waiting.pop(nxt, []):
                 clock.post(clock.now, lambda k=k: client_fwd(k, nxt, 0))
 
-    for k in range(K):
-        clock.post(0.0, lambda k=k: client_fwd(k, 0, 0))
+    if plan.keyx_bytes:
+        # one-time key-agreement setup round gates the step-0 forwards
+        pubs_in = [0]
+
+        def keyx_up(k: int) -> None:
+            _, end = uplink[k].acquire(
+                clock.now, link.transfer_s(k, plan.keyx_bytes))
+            clock.post(end, lambda: keyx_gathered())
+
+        def keyx_gathered() -> None:
+            pubs_in[0] += 1
+            if pubs_in[0] == K:  # role 0 has the full directory: relay it
+                for j in range(K):
+                    clock.post(clock.now, lambda j=j: keyx_down(j))
+
+        def keyx_down(j: int) -> None:
+            _, end = downlink[j].acquire(
+                clock.now, link.transfer_s(j, K * plan.keyx_bytes))
+            clock.post(end, lambda: client_fwd(j, 0, 0))
+
+        for k in range(K):
+            clock.post(0.0, lambda k=k: keyx_up(k))
+    else:
+        for k in range(K):
+            clock.post(0.0, lambda k=k: client_fwd(k, 0, 0))
     clock.run()
 
     report.total_time_s = done_t[0]

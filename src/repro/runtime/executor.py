@@ -60,6 +60,7 @@ from repro.core import merge as merge_lib
 from repro.core import straggler as straggler_lib
 from repro.core.merge import collective_bytes_per_merge
 from repro.core.protocol import Ledger, step_schedule
+from repro.core.secure_agg import KEYX_GROUP_BYTES
 from repro.runtime.deadline import AdaptiveDeadline
 
 DROP_POLICIES = ("neutral", "fused", "impute")
@@ -172,6 +173,18 @@ class Executor:
       merge for programs whose cuts differ in shape per client (the vlm
       sequence concatenation); requires a barrier mode (no EMA imputation
       of a non-uniform stack).
+
+    Secure aggregation (``secure_agg=True``, ``repro.core.secure_agg``):
+    :meth:`setup_secure` runs the one-time in-protocol key exchange (run
+    automatically on the first ``submit_step`` otherwise), after which the
+    workers mask every cut uplink at the source and role 0 merges MASKED
+    cuts — the pairwise masks cancel in the sum/avg merge, so only the
+    aggregate is meaningful and no raw activation is ever observed.
+    Unsupported combinations raise HERE, loudly, rather than silently
+    degrading privacy: a non-additive merge, a program ``merge_fn``
+    (non-uniform cuts have no mask-cancelling sum), and any non-barrier
+    execution (``nowait`` / EMA imputation — a dropped client's masks
+    cannot cancel; there is no dropout-recovery round).
     """
 
     def __init__(self, transport, server_fwd: Callable, loss_fn: Callable,
@@ -179,7 +192,8 @@ class Executor:
                  label_holder: int = 0, drop_policy: Optional[str] = None,
                  ema_decay: float = 0.95, deadline=None,
                  server_takes_batch: bool = False, server_aux: bool = False,
-                 merge_fn: Optional[Callable] = None):
+                 merge_fn: Optional[Callable] = None,
+                 secure_agg: bool = False, secure_scale: float = 1.0):
         if mode not in ("serial", "pipelined", "nowait"):
             raise ValueError(f"mode must be serial|pipelined|nowait, got {mode!r}")
         if drop_policy is None:
@@ -190,6 +204,26 @@ class Executor:
             raise ValueError(
                 "program merge_fn (non-uniform cuts) cannot EMA-impute "
                 "missing clients; use a barrier mode (serial/pipelined)")
+        if secure_agg:
+            if merge not in ("sum", "avg"):
+                raise ValueError(
+                    "secure aggregation needs an additively homomorphic "
+                    f"merge (sum/avg) for the pairwise masks to cancel; got "
+                    f"merge={merge!r}")
+            if merge_fn is not None:
+                raise ValueError(
+                    "secure aggregation cannot run a program merge_fn "
+                    "(non-uniform cuts, e.g. the vlm sequence concat): "
+                    "role 0 must SUM the masked cuts for the pairwise masks "
+                    "to cancel, and a concatenation exposes each masked "
+                    "segment with nothing to cancel against")
+            if mode == "nowait" or drop_policy != "fused":
+                raise ValueError(
+                    "secure aggregation requires barrier execution "
+                    "(drop_policy='fused'): a client absent from a merge "
+                    "leaves its pairwise masks uncancelled and the "
+                    "aggregate unusable — there is no dropout-recovery "
+                    f"round (got mode={mode!r}, drop_policy={drop_policy!r})")
         self.transport = transport
         self.server_fwd = server_fwd
         self.loss_fn = loss_fn
@@ -202,6 +236,12 @@ class Executor:
         self.server_takes_batch = server_takes_batch
         self.server_aux = server_aux
         self.merge_fn = merge_fn
+        self.secure_agg = secure_agg
+        self.secure_scale = secure_scale
+        self._secure_ready = False
+        self._max_secure_step = -1  # highest masked step id (freshness)
+        # one-time key-exchange round audit (keyx_pub/keyx_bcast tags)
+        self.keyx_ledger = Ledger()
         # deadline: None -> bootstrap an AdaptiveDeadline from the first
         # full barrier; float -> static window; AdaptiveDeadline -> as given
         if deadline is None:
@@ -213,9 +253,71 @@ class Executor:
         else:
             self.deadline = None
             self.static_deadline_s = float(deadline)
-        self._schedule = step_schedule(transport.num_clients, label_holder)
+        self._schedule = step_schedule(transport.num_clients, label_holder,
+                                       secure=secure_agg)
         self._inflight: dict[int, _InflightStep] = {}  # insertion-ordered
         self._retired_first_t: dict[tuple[int, int], float] = {}
+
+    # -- secure-aggregation setup (one-time key-exchange round) ---------------
+
+    def setup_secure(self, *, timeout_s: float = 120.0) -> Ledger:
+        """Run the in-protocol pairwise key agreement: gather each client's
+        fixed-size public value, relay the full directory back down, and
+        barrier on every client's ``keys_ready``.  Role 0 only ever handles
+        public group elements — each pair's mask seed is derived at the two
+        clients.  Recorded in :attr:`keyx_ledger` (``keyx_pub[k]`` /
+        ``keyx_bcast[k]`` tags, reconciled against
+        ``costs.key_exchange_bytes`` in tests).  Idempotent; runs
+        automatically on the first :meth:`submit_step` if not called."""
+        if not self.secure_agg:
+            raise RuntimeError("setup_secure on a non-secure Executor "
+                               "(construct with secure_agg=True)")
+        if self._secure_ready:
+            return self.keyx_ledger
+        if self._inflight:
+            raise RuntimeError("key exchange must precede the first step")
+        transport, K = self.transport, self.transport.num_clients
+        schedule = self._schedule
+
+        for spec in schedule.key_pubs:
+            transport.submit(spec.client, {"op": "key_exchange",
+                                           "phase": "pub"})
+        pubs: dict[int, int] = {}
+        while len(pubs) < K:
+            got = transport.next_response(timeout_s)
+            if got is None:
+                raise RuntimeError("transport idle during key exchange "
+                                   f"({len(pubs)}/{K} public values in)")
+            k, resp = got
+            if resp["op"] != "pub":
+                raise RuntimeError(
+                    f"unexpected {resp['op']!r} from client {k} during key "
+                    "exchange")
+            pubs[int(resp["client"])] = resp["pub"]
+            self.keyx_ledger.record_spec_bytes(
+                schedule.key_pubs[int(resp["client"])], KEYX_GROUP_BYTES)
+
+        for spec in schedule.key_bcasts:
+            transport.submit(spec.client, {
+                "op": "key_exchange", "phase": "finish", "pubs": pubs,
+                "microbatches": self.microbatches,
+                "scale": self.secure_scale,
+            })
+            self.keyx_ledger.record_spec_bytes(spec, K * KEYX_GROUP_BYTES)
+        ready = 0
+        while ready < K:
+            got = transport.next_response(timeout_s)
+            if got is None:
+                raise RuntimeError("transport idle awaiting keys_ready "
+                                   f"({ready}/{K})")
+            k, resp = got
+            if resp["op"] != "keys_ready":
+                raise RuntimeError(
+                    f"unexpected {resp['op']!r} from client {k} during key "
+                    "exchange")
+            ready += 1
+        self._secure_ready = True
+        return self.keyx_ledger
 
     # -- step halves ----------------------------------------------------------
 
@@ -239,6 +341,22 @@ class Executor:
         transport, K, M = self.transport, self.transport.num_clients, self.microbatches
         if step in self._inflight:
             raise ValueError(f"step {step} already in flight")
+        if self.secure_agg:
+            if not self._secure_ready:
+                self.setup_secure()
+            # mask freshness: round indices derive from the step id, so a
+            # recycled id (e.g. run_step's default step=0 called in a loop)
+            # would reuse masks and let role 0 difference two uplinks to the
+            # raw activation delta.  The workers enforce this too — this is
+            # the friendly, early error naming the API misuse
+            if step <= self._max_secure_step:
+                raise ValueError(
+                    f"secure aggregation needs strictly increasing step ids "
+                    f"(got {step} after {self._max_secure_step}): the mask "
+                    "round index derives from the step, and a reused round "
+                    "leaks the raw activation delta — pass step= explicitly "
+                    "when looping run_step")
+            self._max_secure_step = step
         B = jax.tree_util.tree_leaves(labels)[0].shape[0]
         if B % M:
             raise ValueError(f"batch {B} not divisible by microbatches={M}")
@@ -554,7 +672,8 @@ class Executor:
         else:
             per_mb_elements = int(cuts[0].size)
             strategy = self.merge
-            cut_bytes = ledger.bytes_with_tag("cut[0]")
+            # the uplink tag is masked_cut[0] under secure aggregation
+            cut_bytes = ledger.bytes_with_tag(self._schedule.cuts[0].tag)
             itemsize = cuts.dtype.itemsize
         return ExecReport(
             mode=self.mode,

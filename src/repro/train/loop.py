@@ -131,7 +131,7 @@ def _make_transport(cfg: ArchConfig, transport: str, *, seed, batch, seq,
 
 
 def _verify_step0(res, program, tower_params, server_params, features, ctx,
-                  microbatches, atol, print_fn):
+                  microbatches, atol, print_fn, masked=False):
     """The acceptance identity: the transport's step-0 gradients must match
     the serial ``protocol_step`` on the same program decomposition.
 
@@ -140,7 +140,13 @@ def _verify_step0(res, program, tower_params, server_params, features, ctx,
     full-batch serial step; families with per-merge statistics (the moe
     router density/capacity behind the aux loss) are only equivalent at
     matching microbatch boundaries, so the reference must slice the same
-    way the pipeline does."""
+    way the pipeline does.
+
+    ``masked`` labels the secure-aggregation run: the executor merged
+    MASKED cuts, the reference is the unmasked serial step, and the match
+    (to the loosened ``atol``) is the in-run proof that the pairwise masks
+    cancelled — role 0 computed the true aggregate without ever observing
+    a raw activation."""
     M = microbatches
     B = jax.tree_util.tree_leaves(ctx)[0].shape[0]
     mbsz = B // M
@@ -164,11 +170,12 @@ def _verify_step0(res, program, tower_params, server_params, features, ctx,
         for a, b in zip(got, want)
     )
     loss_dev = abs(float(res.loss) - float(loss_ref))
+    what = "masked-merge " if masked else ""
     if max_dev > atol or loss_dev > atol:
         raise RuntimeError(
-            f"step-0 gradients diverge from the serial protocol_step: "
+            f"step-0 {what}gradients diverge from the serial protocol_step: "
             f"max |dgrad| {max_dev:.3e}, |dloss| {loss_dev:.3e} > {atol:g}")
-    print_fn(f"step-0 verification vs protocol_step: max |dgrad| "
+    print_fn(f"step-0 {what}verification vs protocol_step: max |dgrad| "
              f"{max_dev:.2e} (<= {atol:g}) OK")
 
 
@@ -219,6 +226,18 @@ def train_split(
     the exact ``run_step`` barrier.  Step 0 is verified against the serial
     ``protocol_step`` either way (its forwards always run on the initial
     params).
+
+    Secure aggregation: ``cfg.vertical.secure_aggregation=True`` runs the
+    one-time in-protocol key exchange over the transport, after which the
+    workers mask every cut uplink at the source and role 0 merges masked
+    cuts — it never observes a raw activation (``repro.core.secure_agg``).
+    Step 0 then verifies the MASKED merge against the unmasked serial
+    ``protocol_step`` to a tolerance loosened for the f32 mask-cancellation
+    residue (valid at any W — round indices are per (step, microbatch)).
+    Unsupported paths raise here rather than silently training unmasked:
+    no-wait mode (a deadline-dropped client's masks cannot cancel) and
+    ``merge_fn`` programs (the vlm sequence concat has no mask-cancelling
+    sum).
     """
     from repro.models.split_program import get_program
     from repro.runtime.executor import Executor
@@ -233,6 +252,24 @@ def train_split(
     W = inflight_steps
 
     program = get_program(cfg)
+    secure = cfg.vertical.secure_aggregation
+    if secure:
+        # fail actionably BEFORE spawning workers — a silently unmasked run
+        # would be a privacy hole, not a degraded mode
+        if runtime == "nowait":
+            raise ValueError(
+                "secure_aggregation=True cannot train in no-wait mode: a "
+                "deadline-dropped client's pairwise masks do not cancel and "
+                "the merged aggregate is unusable (no dropout-recovery "
+                "round).  Use --runtime serial/pipelined, or disable "
+                "secure aggregation.")
+        if program.merge_fn is not None:
+            raise ValueError(
+                f"secure_aggregation=True is unsupported for the "
+                f"{cfg.family!r} program's non-uniform merge_fn (sequence "
+                "concat): role 0 must SUM masked cuts for the pairwise "
+                "masks to cancel.  Disable secure aggregation for this "
+                "family.")
     params = backbone.init_params(cfg, jax.random.PRNGKey(seed))
     tower_params, server_params = program.partition(params)
 
@@ -274,9 +311,12 @@ def train_split(
                          "imputed, not serial")
             else:
                 ctx0 = program.batch_ctx(b0)
+                # masked merges carry the f32 mask-cancellation residue
+                # (secure_agg.cancellation_bound): loosen the tolerance
+                atol = max(verify_atol, 1e-3) if secure else verify_atol
                 _verify_step0(res, program, tower_params, server_params,
-                              program.features(b0), ctx0, M, verify_atol,
-                              print_fn)
+                              program.features(b0), ctx0, M, atol,
+                              print_fn, masked=secure)
             if program.has_aux:
                 aux_bytes = res.ledger.bytes_with_tag("aux_loss")
                 print_fn(f"router aux loss {float(res.aux):.6f} "
@@ -307,7 +347,13 @@ def train_split(
         # spawned workers must not leak when it raises
         executor = Executor(tr, program.server_fwd, program.loss_fn,
                             program.merge, mode=mode, microbatches=M,
-                            **program.executor_kwargs)
+                            secure_agg=secure, **program.executor_kwargs)
+        if secure:
+            kx = executor.setup_secure()
+            print_fn(f"secure aggregation: pairwise key exchange complete "
+                     f"({kx.total()} B over {transport}; cut uplinks are "
+                     "masked at the source, role 0 observes no raw "
+                     "activation)")
         pipeline = StepPipeline(executor, window=W)
 
         def collect_one():

@@ -39,6 +39,13 @@ Worker protocol (requests handled by :class:`TowerWorker`):
   average iff ``collect``; with ``expected_jacs`` the update is deferred
   until that many backwards for the step have landed — the completing
   backward then returns the ``step_done``)
+* ``key_exchange {phase: "pub"}``         -> ``pub {pub}`` (ephemeral DH
+  public value for secure aggregation)
+* ``key_exchange {phase: "finish", pubs, microbatches, scale}`` ->
+  ``keys_ready {}`` (derives one shared mask seed per peer locally; from
+  then on every forward's cut uplink is masked at the source with fresh
+  per-``(step, microbatch)`` round noise — role 0 relays public values but
+  never holds a pair's seed, and never observes a raw cut activation)
 * ``get_params {}``                       -> ``params {params}``
 * ``shutdown {}``                         -> ``bye {}``
 

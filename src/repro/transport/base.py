@@ -15,6 +15,8 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import secure_agg
+
 
 class Transport:
     """Star-topology message plane; role 0 (the executor) is the caller."""
@@ -70,6 +72,17 @@ class TowerWorker:
       (FIFO transports always deliver jacobians first, but the protocol
       stays safe for reordering backends); the deferred ``step_done`` is
       returned by the completing backward.
+
+    Secure aggregation (``repro.core.secure_agg``): the one-time
+    ``key_exchange`` op runs in two phases — ``"pub"`` draws an ephemeral
+    DH keypair and returns the public value; ``"finish"`` delivers the full
+    public directory (plus ``microbatches``/``scale``) and derives one
+    shared mask key per peer, locally, so role 0 relays public values but
+    never holds a pair's seed.  Once keys are set, every forward masks its
+    cut AT THE SOURCE with fresh per-round noise
+    (``round_idx = step * microbatches + mb`` — unique per (step,
+    microbatch) at any driver window W, so masks are never reused and
+    consecutive uplinks cannot be differenced to raw activation deltas).
     """
 
     def __init__(self, client_id: int, tower_fwd: Callable, tower_params, *,
@@ -87,6 +100,8 @@ class TowerWorker:
         self._grad_sums: dict = {}  # step -> accumulated tower grads
         self._jacs_seen: dict = {}  # step -> backwards processed
         self._pending_finish: dict = {}  # step -> deferred finish request
+        self._dh_secret: Optional[int] = None  # ephemeral, key exchange only
+        self._secure: Optional[dict] = None  # pair keys + round derivation
 
     # -- ops ----------------------------------------------------------------
 
@@ -98,6 +113,8 @@ class TowerWorker:
             return self._backward(request)
         if op == "finish_step":
             return self._finish_step(request)
+        if op == "key_exchange":
+            return self._key_exchange(request)
         if op == "get_params":
             return {"op": "params", "client": self.client_id,
                     "params": self.params}
@@ -120,8 +137,57 @@ class TowerWorker:
         self._feats[(step, mb)] = feats
         params = self._step_params.setdefault(step, self.params)
         cut = self.tower_fwd(params, feats)
+        if self._secure is not None:
+            # mask at the source: role 0 only ever observes the blinded cut.
+            # round_idx is unique per (step, mb) at any driver window W, so
+            # masks are never reused across uplinks (differencing two steps'
+            # masked cuts yields noise, not the raw activation delta).  The
+            # worker — not role 0 — enforces freshness: requests arrive FIFO
+            # in (step, mb) order, so a non-increasing round means a replayed
+            # or recycled step id, and sending a reused mask would let the
+            # server difference two uplinks to the raw activation delta
+            sec = self._secure
+            round_idx = step * sec["microbatches"] + mb
+            if round_idx <= sec["last_round"]:
+                raise ValueError(
+                    f"client {self.client_id}: mask round {round_idx} "
+                    f"(step {step}, mb {mb}) already used (last "
+                    f"{sec['last_round']}) — reusing a mask round leaks the "
+                    "raw activation delta; drive secure steps with strictly "
+                    "increasing step ids")
+            sec["last_round"] = round_idx
+            cut = secure_agg.mask_payload_with_keys(
+                cut, sec["pair_keys"], self.client_id, round_idx,
+                sec["scale"])
         return {"op": "cut", "client": self.client_id, "step": step,
                 "mb": mb, "cut": cut}
+
+    def _key_exchange(self, request: dict) -> dict:
+        phase = request["phase"]
+        if phase == "pub":
+            self._dh_secret, pub = secure_agg.dh_keypair()
+            return {"op": "pub", "client": self.client_id, "pub": pub}
+        if phase == "finish":
+            if self._dh_secret is None:
+                raise ValueError(
+                    f"client {self.client_id}: key_exchange finish before "
+                    "pub phase")
+            pair_keys = {}
+            for other, peer_pub in request["pubs"].items():
+                other = int(other)
+                if other == self.client_id:
+                    continue
+                shared = secure_agg.dh_shared(self._dh_secret, peer_pub)
+                pair_keys[other] = secure_agg.seed_from_shared(shared)
+            self._dh_secret = None  # ephemeral: drop it once keys exist
+            self._secure = {
+                "pair_keys": pair_keys,
+                "microbatches": int(request.get("microbatches", 1)),
+                "scale": float(request.get("scale", 1.0)),
+                "last_round": -1,  # freshness floor: rounds must increase
+            }
+            return {"op": "keys_ready", "client": self.client_id}
+        raise ValueError(f"unknown key_exchange phase {phase!r}")
 
     def _backward(self, request: dict) -> dict:
         step, mb = request["step"], request["mb"]

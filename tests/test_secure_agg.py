@@ -1,4 +1,5 @@
-"""Secure-aggregation protocol: exact mask cancellation, per-client privacy."""
+"""Secure-aggregation protocol: mask cancellation (to the documented f32
+bound), per-client privacy, mask freshness, and the DH key agreement."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,10 +9,10 @@ from repro.core import secure_agg
 
 
 @pytest.mark.parametrize("k,d,seed", [(2, 1, 0), (3, 16, 5), (4, 64, 11), (6, 33, 77)])
-def test_masks_cancel_exactly(k, d, seed):
+def test_masks_cancel_within_bound(k, d, seed):
     payloads = jax.random.normal(jax.random.PRNGKey(seed), (k, d))
-    agg, masked = secure_agg.secure_sum(payloads, base_seed=seed)
-    # float32 pairwise masks cancel to ~ulp-level residue
+    agg, masked = secure_agg.secure_sum(payloads, base_seed=seed, round_idx=0)
+    # float32 pairwise masks cancel to ~ulp-level residue, NOT exactly
     np.testing.assert_allclose(agg, payloads.sum(0), rtol=1e-4, atol=1e-4)
 
 
@@ -23,17 +24,34 @@ def test_masks_cancel_hypothesis_sweep():
     @given(k=st.integers(2, 6), d=st.integers(1, 64), seed=st.integers(0, 999))
     def prop(k, d, seed):
         payloads = jax.random.normal(jax.random.PRNGKey(seed), (k, d))
-        agg, _ = secure_agg.secure_sum(payloads, base_seed=seed)
+        agg, _ = secure_agg.secure_sum(payloads, base_seed=seed, round_idx=0)
         np.testing.assert_allclose(agg, payloads.sum(0), rtol=1e-4, atol=1e-4)
 
     prop()
+
+
+def test_cancellation_bound_asserted_and_scale_dependent():
+    """``secure_sum`` asserts the documented scale-dependent residue bound;
+    the bound itself must grow with the mask scale and client count (the
+    docstring's claim that cancellation is NOT exact, quantified)."""
+    payloads = jax.random.normal(jax.random.PRNGKey(3), (5, 256))
+    # large scale: the internal assert must hold even when masks dominate
+    agg, _ = secure_agg.secure_sum(payloads, base_seed=9, round_idx=4,
+                                   scale=100.0)
+    residual = float(jnp.max(jnp.abs(agg - payloads.sum(0))))
+    assert residual <= secure_agg.cancellation_bound(5, 100.0, 4.0)
+    assert (secure_agg.cancellation_bound(4, 10.0)
+            > secure_agg.cancellation_bound(4, 1.0))
+    assert (secure_agg.cancellation_bound(8, 1.0)
+            > secure_agg.cancellation_bound(2, 1.0))
 
 
 def test_server_view_is_masked():
     """The server's per-client view must differ from the raw payload by the
     mask scale — individual activations are not exposed."""
     payloads = jax.random.normal(jax.random.PRNGKey(0), (4, 128))
-    _, masked = secure_agg.secure_sum(payloads, base_seed=7, scale=10.0)
+    _, masked = secure_agg.secure_sum(payloads, base_seed=7, round_idx=0,
+                                      scale=10.0)
     for kk in range(4):
         dev = float(jnp.mean(jnp.abs(masked[kk] - payloads[kk])))
         assert dev > 1.0, f"client {kk} payload insufficiently masked ({dev})"
@@ -47,10 +65,35 @@ def test_round_separation():
     assert float(jnp.max(jnp.abs(m0 - m1))) > 0.1
 
 
+def test_mask_reuse_regression_consecutive_rounds_not_differenceable():
+    """The mask-reuse bug, pinned: with a REUSED round index the server
+    differences two steps' masked uplinks and recovers the raw activation
+    delta exactly; with fresh per-round indices the difference is mask
+    noise, not the delta."""
+    k0, k1 = jax.random.split(jax.random.PRNGKey(5))
+    p_t0 = jax.random.normal(k0, (4, 64))
+    p_t1 = jax.random.normal(k1, (4, 64))
+    true_delta = p_t1 - p_t0
+
+    # the broken pattern: same round both steps -> masks cancel in the diff
+    _, m_t0 = secure_agg.secure_sum(p_t0, base_seed=2, round_idx=0)
+    _, m_t1_reused = secure_agg.secure_sum(p_t1, base_seed=2, round_idx=0)
+    leaked = m_t1_reused - m_t0
+    np.testing.assert_allclose(leaked, true_delta, atol=1e-4)  # the leak
+
+    # the fix: fresh round per step -> the diff is dominated by fresh masks
+    _, m_t1_fresh = secure_agg.secure_sum(p_t1, base_seed=2, round_idx=1)
+    residual = (m_t1_fresh - m_t0) - true_delta
+    for kk in range(4):
+        assert float(jnp.mean(jnp.abs(residual[kk]))) > 0.5, (
+            f"client {kk}: consecutive-step masked uplinks difference to "
+            "the raw delta — masks were reused")
+
+
 def test_pair_seed_symmetry():
     """Seed for (i, j) equals seed for (j, i) — both ends derive one mask."""
-    a = secure_agg.pair_seed(0, 1, 3)
-    b = secure_agg.pair_seed(0, 3, 1)
+    a = secure_agg.pair_seed(0, 1, 3, round_idx=2)
+    b = secure_agg.pair_seed(0, 3, 1, round_idx=2)
     assert jnp.array_equal(a, b)
 
 
@@ -59,6 +102,48 @@ def test_merge_avg_compatible():
     from repro.core import merge as merge_lib
 
     payloads = jax.random.normal(jax.random.PRNGKey(2), (4, 8, 16))
-    agg, masked = secure_agg.secure_sum(payloads, base_seed=3)
+    agg, masked = secure_agg.secure_sum(payloads, base_seed=3, round_idx=0)
     plain_avg = merge_lib.merge_stacked(payloads, "avg")
     np.testing.assert_allclose(agg / 4.0, plain_avg, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# in-protocol key agreement (the transports' path)
+# ---------------------------------------------------------------------------
+
+def test_dh_shared_secret_symmetric():
+    s_i, pub_i = secure_agg.dh_keypair()
+    s_j, pub_j = secure_agg.dh_keypair()
+    assert pub_i != pub_j
+    shared_ij = secure_agg.dh_shared(s_i, pub_j)
+    shared_ji = secure_agg.dh_shared(s_j, pub_i)
+    assert shared_ij == shared_ji
+    assert jnp.array_equal(secure_agg.seed_from_shared(shared_ij),
+                           secure_agg.seed_from_shared(shared_ji))
+    with pytest.raises(ValueError):
+        secure_agg.dh_shared(s_i, 0)  # degenerate public value rejected
+
+
+def test_dh_derived_masks_cancel_like_centralized():
+    """K clients running the real key agreement (each holding only its own
+    secret + the public directory) produce masks that cancel in the sum to
+    the same bound as the centralized path."""
+    K, shape = 4, (8, 16)
+    keypairs = [secure_agg.dh_keypair() for _ in range(K)]
+    pubs = [pub for _, pub in keypairs]
+    payloads = jax.random.normal(jax.random.PRNGKey(11), (K,) + shape)
+
+    masked = []
+    for i, (secret, _) in enumerate(keypairs):
+        pair_keys = {
+            j: secure_agg.seed_from_shared(secure_agg.dh_shared(secret, pubs[j]))
+            for j in range(K) if j != i
+        }
+        masked.append(secure_agg.mask_payload_with_keys(
+            payloads[i], pair_keys, i, round_idx=3, scale=2.0))
+    masked = jnp.stack(masked)
+    agg = jnp.sum(masked, axis=0)
+    np.testing.assert_allclose(agg, payloads.sum(0), rtol=1e-4, atol=2e-4)
+    # and each uplink really is blinded
+    for i in range(K):
+        assert float(jnp.mean(jnp.abs(masked[i] - payloads[i]))) > 0.5

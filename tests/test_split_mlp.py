@@ -113,7 +113,7 @@ def test_secure_agg_equals_plain_in_expectation(bank):
         towers.mlp_tower_apply(params["towers"][k], x[:, jnp.asarray(s.indices)])
         for k, s in enumerate(slices)
     ])
-    agg, _ = secure_agg.secure_sum(cuts, base_seed=0)
+    agg, _ = secure_agg.secure_sum(cuts, base_seed=0, round_idx=0)
     merged_secure = agg / cfg.num_clients
     merged_plain = merge_lib.merge_stacked(cuts, "avg")
     np.testing.assert_allclose(merged_secure, merged_plain, rtol=1e-3, atol=1e-3)
