@@ -162,7 +162,13 @@ def bench_split_exec(out: dict) -> None:
     role-3 slot, and the sum/avg-merge exemplars (dense, moe) carry a
     secure-aggregation overhead column: the same steps with masked cut
     uplinks (source masking + masked merge) plus the one-time key-exchange
-    bytes, vs the plain run."""
+    bytes, vs the plain run.
+
+    The same exemplars also carry accuracy-vs-bytes columns per compression
+    scheme (repro.core.compression — topk 0.25 and int8): the ledger's
+    compressed cut-uplink bytes, their ratio to the plain f32 uplink, the
+    step time, and the loss deviation vs the uncompressed run (the accuracy
+    cost the saved bytes buy)."""
     import jax
     import jax.numpy as jnp
 
@@ -184,13 +190,15 @@ def bench_split_exec(out: dict) -> None:
         b = {k: jnp.asarray(v) for k, v in loader.next_batch().items()}
         feats, ctx = program.features(b), program.batch_ctx(b)
 
-        def timed_run(secure: bool):
-            workers = [TowerWorker(k, program.tower_fwd(k), towers_p[k])
+        def timed_run(secure: bool = False, compress=None):
+            workers = [TowerWorker(k, program.tower_fwd(k), towers_p[k],
+                                   compress=compress)
                        for k in range(program.num_clients)]
             with InprocTransport(workers) as tr:
                 executor = Executor(tr, program.server_fwd, program.loss_fn,
                                     program.merge, mode="pipelined",
                                     microbatches=1, secure_agg=secure,
+                                    compress=compress,
                                     **program.executor_kwargs)
                 if secure:
                     executor.setup_secure()
@@ -224,6 +232,22 @@ def bench_split_exec(out: dict) -> None:
             _emit(f"split_exec/{cfg.family}_secure", sec_dt * 1e6,
                   f"{sec_dt / dt:.2f}x_vs_plain "
                   f"keyx={sec_exec.keyx_ledger.total()}B")
+            # accuracy-vs-bytes per compression scheme: saved uplink bytes
+            # against the loss deviation the lossy wire introduces
+            plain_bytes = res.report.cut_bytes_per_client
+            for scheme in ("topk", "int8"):
+                c_dt, c_res, _ = timed_run(compress=scheme)
+                c_bytes = c_res.report.cut_bytes_per_client
+                loss_dev = abs(float(c_res.loss) - float(res.loss))
+                row.update({
+                    f"{scheme}_step_time_ms": c_dt * 1e3,
+                    f"{scheme}_cut_bytes_per_client": c_bytes,
+                    f"{scheme}_bytes_vs_plain": c_bytes / plain_bytes,
+                    f"{scheme}_loss_dev_vs_plain": loss_dev,
+                })
+                _emit(f"split_exec/{cfg.family}_{scheme}", c_dt * 1e6,
+                      f"{c_bytes / plain_bytes:.2f}x_bytes "
+                      f"loss_dev={loss_dev:.4f}")
         rows.append(row)
         _emit(f"split_exec/{cfg.family}", dt * 1e6,
               f"{cfg.name} inproc K={program.num_clients}")

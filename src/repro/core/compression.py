@@ -1,4 +1,4 @@
-"""[Beyond paper] Cut-layer activation compression.
+"""[Beyond paper] Cut-layer activation/jacobian compression.
 
 The paper's §4.4 names STC-style sparsification and random-rotation
 compression as future work for reducing cut-layer traffic.  We implement two
@@ -6,16 +6,51 @@ schemes with straight-through gradients so they compose with end-to-end
 training:
 
 * top-k sparsification (STC-flavoured): keep the k largest-|x| entries per
-  feature vector, zero the rest — traffic shrinks to ~k (values + indices);
+  feature vector, zero the rest — the wire frame is a D-bit coordinate
+  bitmap plus the k kept values per vector;
 * int8 affine quantization: per-vector scale/zero-point.
 
-Both report their wire-bytes so EXPERIMENTS.md can trade accuracy against
-the collective roofline term.
+Both report their wire-bytes (:func:`wire_bytes` for the analytic claim,
+:func:`payload_bytes` for the bytes a specific payload actually ships) so
+the protocol ``Ledger`` and the ``StepPlan`` simulators clock compressed
+links; ``benchmarks/run.py`` trades accuracy against bytes in the
+``BENCH_split_exec.json`` artifact (see the compressed-cut section of
+ROADMAP.md).
+
+On the execution path compression runs at the transport boundary with
+**error feedback** (:func:`compress_with_feedback`): the residual each
+compression step drops is carried into the next step's payload, so the
+time-averaged wire traffic is unbiased — ``TowerWorker`` compresses cut
+uplinks at the source, the ``Executor`` compresses jacobian downlinks
+symmetrically.  Secure aggregation does NOT compose with compression:
+additive f32 masks do not cancel through quantized/sparsified values
+(the modular-mask gap Secure Forward Aggregation addresses), and the
+``Executor`` rejects the combination loudly.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
+
+SCHEMES = ("topk", "int8")
+
+# step-0 in-run verification tolerance (train_split): the transport's
+# compressed step-0 gradients vs the serial ``protocol_step`` running the
+# SAME compression with zero error-feedback residual — the two paths
+# compute identical compressed payloads, so this only absorbs float
+# accumulation-order noise (mirrors the secure-agg masked-verify pattern,
+# where the loosened tolerance absorbs the mask-cancellation residue)
+STEP0_VERIFY_ATOL = 1e-4
+
+# documented compression-error tolerances: empirical max |compressed grad -
+# plain grad| bounds for the reduced verification configs exercised in
+# tests/test_compressed_exec.py (measured maxima ~0.71 for topk on the moe
+# config, ~0.086 for int8; kept with headroom).  These bound the *accuracy*
+# cost of the lossy wire, not the wire path's numerics — compression error
+# is data-dependent, so they are loose
+GRAD_VS_PLAIN_ATOL = {"topk": 1.5, "int8": 0.25}
 
 
 @jax.custom_vjp
@@ -35,26 +70,43 @@ def _ste_bwd(_, g):
 _ste.defvjp(_ste_fwd, _ste_bwd)
 
 
+def topk_count(last_dim: int, fraction: float) -> int:
+    """Entries kept per feature vector: the k of top-k."""
+    return max(1, int(round(last_dim * fraction)))
+
+
 def topk_sparsify(x: jnp.ndarray, fraction: float) -> jnp.ndarray:
-    """Keep the top-``fraction`` entries by magnitude along the last axis."""
+    """Keep EXACTLY the top-``fraction`` entries by magnitude along the last
+    axis, ties broken deterministically by ascending index (mirrors
+    kernels/merge_pool's tie handling: ties must not let the payload exceed
+    the k-per-vector wire contract that ``wire_bytes`` claims and the
+    Ledger audits)."""
     D = x.shape[-1]
-    k = max(1, int(round(D * fraction)))
-    mag = jnp.abs(x)
-    # threshold from a stop_gradient'd copy: the selection is not
-    # differentiated (STE), and sort never sees a tangent (its JVP rule is
-    # broken against this jaxlib)
-    mag_sg = jax.lax.stop_gradient(mag)
-    kth = jnp.sort(mag_sg, axis=-1)[..., D - k][..., None]
-    sparse = jnp.where(mag >= kth, x, jnp.zeros_like(x))
+    k = topk_count(D, fraction)
+    # selection from a stop_gradient'd copy: it is not differentiated
+    # (STE), and sort never sees a tangent (its JVP rule is broken against
+    # this jaxlib).  Stable argsort on -|x| ranks equal magnitudes by
+    # ascending index, so exactly k entries survive even on ties
+    mag = jax.lax.stop_gradient(jnp.abs(x))
+    order = jnp.argsort(-mag, axis=-1, stable=True)
+    ranks = jnp.argsort(order, axis=-1, stable=True)
+    sparse = jnp.where(ranks < k, x, jnp.zeros_like(x))
     return _ste(x, sparse)
 
 
 def int8_quantize(x: jnp.ndarray) -> jnp.ndarray:
-    """Fake-quantize to int8 per vector (affine), straight-through grads."""
-    lo = jnp.min(x, axis=-1, keepdims=True)
-    hi = jnp.max(x, axis=-1, keepdims=True)
+    """Fake-quantize to int8 per vector (affine), straight-through grads.
+
+    Codes are clamped to the representable [0, 255] range, and non-finite
+    inputs (inf/nan — unrepresentable in any affine int8 frame) are encoded
+    as 0.0 rather than poisoning the vector's scale or dequantizing to
+    garbage silently."""
+    finite = jnp.isfinite(x)
+    safe = jnp.where(finite, x, jnp.zeros_like(x))
+    lo = jnp.min(safe, axis=-1, keepdims=True)
+    hi = jnp.max(safe, axis=-1, keepdims=True)
     scale = jnp.maximum(hi - lo, 1e-8) / 255.0
-    q = jnp.round((x - lo) / scale)
+    q = jnp.clip(jnp.round((safe - lo) / scale), 0.0, 255.0)
     deq = q * scale + lo
     return _ste(x, deq.astype(x.dtype))
 
@@ -69,18 +121,66 @@ def apply_compression(x: jnp.ndarray, scheme: str | None, topk_fraction: float =
     raise ValueError(f"unknown compression scheme {scheme!r}")
 
 
+def compress_with_feedback(x: jnp.ndarray, residual: Optional[jnp.ndarray],
+                           scheme: str | None, topk_fraction: float = 0.25):
+    """One error-feedback compression step: compress ``x + residual`` and
+    return ``(compressed, new_residual)`` where the new residual is
+    everything this step's lossy encode dropped.  ``residual=None`` (or a
+    stale residual whose shape no longer matches, e.g. after a batch-shape
+    change) starts from zero — which is why step-0 payloads equal a plain
+    ``apply_compression`` and the serial reference can verify them."""
+    if scheme is None:
+        return x, residual
+    if residual is not None and residual.shape != x.shape:
+        residual = None
+    target = x if residual is None else x + residual
+    compressed = apply_compression(target, scheme, topk_fraction)
+    return compressed, target - compressed
+
+
 def wire_bytes(shape, dtype_bytes: int, scheme: str | None, topk_fraction: float = 0.25) -> int:
-    """Bytes on the wire for one cut activation under a scheme."""
+    """Bytes on the wire for one cut/jacobian payload under a scheme — the
+    analytic claim the Ledger audits (via :func:`payload_bytes`) and the
+    ``StepPlan`` simulators clock.
+
+    topk ships an STC-style sparse frame per vector: a D-bit coordinate
+    bitmap plus the k kept values — at fraction 0.25 and f32 values that is
+    ``0.25*4 + 1/8`` ≈ 0.28x the raw f32 payload."""
     n = 1
     for s in shape:
         n *= s
     if scheme is None:
         return n * dtype_bytes
+    D = shape[-1]
+    vecs = n // D
     if scheme == "topk":
-        k = max(1, int(round(shape[-1] * topk_fraction)))
-        vecs = n // shape[-1]
-        return vecs * k * (dtype_bytes + 4)  # values + int32 indices
+        k = topk_count(D, topk_fraction)
+        return vecs * ((D + 7) // 8 + k * dtype_bytes)
     if scheme == "int8":
-        vecs = n // shape[-1]
-        return n + vecs * 8  # int8 payload + scale/zero-point per vector
+        return n + vecs * 8  # int8 codes + scale/zero-point per vector
+    raise ValueError(scheme)
+
+
+def payload_bytes(x, scheme: str | None, topk_fraction: float = 0.25) -> int:
+    """Actual wire bytes of ONE compressed payload array, derived from the
+    payload itself rather than the analytic k-per-vector claim.
+
+    For topk the stored values are the nonzeros (a kept entry that is
+    exactly 0.0 decodes identically whether shipped or not, so it is not
+    shipped); with deterministic tie-breaking this equals
+    :func:`wire_bytes` on any payload with nonzero kept values — the
+    equality IS the ledger-vs-costs audit, and any drift (e.g. magnitude
+    ties keeping more than k entries) shows up as a byte mismatch instead
+    of passing silently."""
+    import numpy as np
+
+    if scheme is None:
+        return x.size * x.dtype.itemsize
+    D = x.shape[-1]
+    vecs = x.size // D
+    if scheme == "topk":
+        nnz = int(np.count_nonzero(np.asarray(x)))
+        return vecs * ((D + 7) // 8) + nnz * x.dtype.itemsize
+    if scheme == "int8":
+        return x.size + vecs * 8  # dequantized f32 crossed; codes ship int8
     raise ValueError(scheme)

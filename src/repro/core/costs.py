@@ -91,6 +91,21 @@ def masked_cut_bytes(batch_size: int, cut_dim: int) -> int:
     return batch_size * cut_dim * 4
 
 
+def wire_bytes(shape, dtype_bytes: int = 4, scheme=None,
+               topk_fraction: float = 0.25) -> int:
+    """Bytes of one cut/jacobian payload under a compression scheme — THE
+    byte model the executor's Ledger audits (``compressed_cut[k]`` /
+    ``compressed_jac[k]`` tags) and the :class:`~repro.runtime.engine.
+    StepPlan` simulators clock for both cut directions.  ``scheme=None`` is
+    the dense f32 payload; ``"topk"`` prices the STC-style bitmap+values
+    frame, ``"int8"`` the code-plus-scale frame.  Delegates to
+    ``repro.core.compression.wire_bytes`` so the codec and its cost model
+    cannot drift apart."""
+    from repro.core.compression import wire_bytes as _codec_wire_bytes
+
+    return _codec_wire_bytes(shape, dtype_bytes, scheme, topk_fraction)
+
+
 def aux_exchange_bytes(microbatches: int, itemsize: int = 4) -> int:
     """Bytes of the role-0 -> role-3 auxiliary-loss slot per step: one f32
     scalar per microbatch (families whose server network computes its own

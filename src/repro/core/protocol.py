@@ -86,8 +86,8 @@ class MessageSpec:
     sender: str
     receiver: str
     tag: str
-    # "cut" | "masked_cut" | "head_out" | "aux" | "head_jac" | "jac"
-    # | "keyx_pub" | "keyx_bcast"
+    # "cut" | "masked_cut" | "compressed_cut" | "head_out" | "aux"
+    # | "head_jac" | "jac" | "compressed_jac" | "keyx_pub" | "keyx_bcast"
     kind: str
     client: Optional[int] = None
 
@@ -114,7 +114,17 @@ class StepSchedule:
     the aux slot the specs are always part of the definition; they are only
     recorded (and costed) when the schedule is built with ``secure=True``,
     in which case the cut uplinks carry the ``masked_cut`` kind — role 0
-    observes mask-blinded activations and only their sum is meaningful."""
+    observes mask-blinded activations and only their sum is meaningful.
+
+    A schedule built with ``compress`` set ("topk" | "int8",
+    ``repro.core.compression``) tags the cut uplinks ``compressed_cut`` and
+    the jacobian downlinks ``compressed_jac``: both directions ship lossy
+    payloads whose bytes are the codec's wire frame
+    (``costs.wire_bytes``), not the dense f32 tensor — the Ledger audits
+    those codec bytes and the StepPlan simulators clock them.  ``secure``
+    and ``compress`` are mutually exclusive: additive masks do not cancel
+    through quantized/sparsified values, so composing them would silently
+    break the only-the-sum-is-meaningful privacy claim."""
 
     cuts: tuple[MessageSpec, ...]
     head_out: MessageSpec
@@ -124,18 +134,28 @@ class StepSchedule:
     key_pubs: tuple[MessageSpec, ...] = ()
     key_bcasts: tuple[MessageSpec, ...] = ()
     secure: bool = False
+    compress: Optional[str] = None
 
 
 def step_schedule(num_clients: int, label_holder: int = 0, *,
-                  secure: bool = False) -> StepSchedule:
-    cut_kind = "masked_cut" if secure else "cut"
+                  secure: bool = False,
+                  compress: Optional[str] = None) -> StepSchedule:
+    if secure and compress is not None:
+        raise ValueError(
+            "secure aggregation and cut compression cannot compose: "
+            "additive masks do not cancel through quantized/sparsified "
+            "values — run one or the other")
+    cut_kind = ("masked_cut" if secure
+                else "compressed_cut" if compress is not None else "cut")
+    jac_kind = "compressed_jac" if compress is not None else "jac"
     cuts = tuple(
         MessageSpec(_role_of(k, label_holder), "role0",
                     f"{cut_kind}[{k}]", cut_kind, k)
         for k in range(num_clients)
     )
     jacs = tuple(
-        MessageSpec("role0", _role_of(k, label_holder), f"jac[{k}]", "jac", k)
+        MessageSpec("role0", _role_of(k, label_holder), f"{jac_kind}[{k}]",
+                    jac_kind, k)
         for k in range(num_clients)
     )
     key_pubs = tuple(
@@ -176,6 +196,8 @@ def protocol_step(
     server_takes_batch: bool = False,
     server_aux: bool = False,
     merge_fn: Optional[Callable] = None,
+    compress: Optional[str] = None,
+    topk_fraction: float = 0.25,
 ):
     """One paper-protocol training step; returns (loss, tower_grads, server_grads).
 
@@ -202,13 +224,15 @@ def protocol_step(
     K = len(tower_params)
     tower_fwds = (list(tower_fwd) if isinstance(tower_fwd, (list, tuple))
                   else [tower_fwd] * K)
-    workers = [TowerWorker(k, tower_fwds[k], tower_params[k])
+    workers = [TowerWorker(k, tower_fwds[k], tower_params[k],
+                           compress=compress, topk_fraction=topk_fraction)
                for k in range(K)]
     executor = Executor(
         SimTransport(workers), server_fwd, loss_fn, merge,
         mode="serial", microbatches=1, label_holder=label_holder,
         drop_policy="neutral", server_takes_batch=server_takes_batch,
         server_aux=server_aux, merge_fn=merge_fn,
+        compress=compress, topk_fraction=topk_fraction,
     )
     res = executor.run_step(
         server_params, labels, features=list(features),

@@ -49,6 +49,15 @@ Examples:
   PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \\
       --steps 5 --batch 4 --seq 64 --transport multiproc --secure-agg
 
+  # COMPRESSED cut traffic on the wire (repro.core.compression): workers
+  # top-k-sparsify (or int8-quantize) their cut uplinks at the source with
+  # error feedback, role 0 compresses the jacobian downlinks symmetrically,
+  # the ledger audits codec wire bytes, and step 0 verifies against the
+  # serial protocol_step running the same codec:
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \\
+      --steps 5 --batch 4 --seq 64 --transport multiproc \\
+      --compress topk --topk-fraction 0.25
+
   # split execution is family-agnostic (repro.models.split_program): moe
   # ships its router aux loss through the protocol's role-0 -> role-3 aux
   # slot, audio trains mel-band encoder towers, vlm by-source modality
@@ -202,6 +211,17 @@ def main(argv=None):
                          "source, role 0 merges masked cuts and never "
                          "observes a raw activation (sum/avg merges, "
                          "barrier runtimes, split execution only)")
+    ap.add_argument("--compress", default=None, choices=["topk", "int8"],
+                    help="compress cut traffic on the wire "
+                         "(repro.core.compression): workers compress cut "
+                         "uplinks at the source with error feedback, the "
+                         "executor compresses jacobian downlinks "
+                         "symmetrically; step 0 verifies against the serial "
+                         "protocol_step running the same codec.  Mutually "
+                         "exclusive with --secure-agg")
+    ap.add_argument("--topk-fraction", type=float, default=0.25,
+                    help="fraction of cut entries kept per vector under "
+                         "--compress topk")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -222,12 +242,26 @@ def main(argv=None):
     if cfg.vertical is None and (args.runtime != "serial"
                                  or args.straggler is not None
                                  or args.transport != "sim"
-                                 or args.secure_agg):
+                                 or args.secure_agg
+                                 or args.compress):
         raise SystemExit(
-            f"--runtime {args.runtime}/--straggler/--transport/--secure-agg "
-            "need a vertical config; this run is centralized (--vertical "
-            "off or arch without one)"
+            f"--runtime {args.runtime}/--straggler/--transport/--secure-agg/"
+            "--compress need a vertical config; this run is centralized "
+            "(--vertical off or arch without one)"
         )
+    if args.compress:
+        if args.secure_agg:
+            raise SystemExit(
+                "--compress cannot run with --secure-agg: additive masks do "
+                "not cancel through quantized/sparsified values (the merged "
+                "aggregate would be garbage and the uplinks no longer "
+                "blinded).  Pick one.")
+        if not (0.0 < args.topk_fraction <= 1.0):
+            raise SystemExit(
+                f"--topk-fraction must be in (0, 1], got {args.topk_fraction}")
+        cfg = cfg.with_vertical(dataclasses.replace(
+            cfg.vertical, compression=args.compress,
+            topk_fraction=args.topk_fraction))
     if args.secure_agg:
         if args.transport == "sim":
             raise SystemExit(
@@ -293,7 +327,7 @@ def main(argv=None):
         summary.update(arch=cfg.name, params=n_params, steps=args.steps,
                        vertical=args.vertical, transport=args.transport,
                        inflight_steps=args.inflight_steps,
-                       secure_agg=args.secure_agg)
+                       secure_agg=args.secure_agg, compress=args.compress)
         if report is not None:
             summary["runtime"] = {
                 "mode": report.mode,

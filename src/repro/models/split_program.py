@@ -30,7 +30,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core import compression as comp_lib
 from repro.models import layers
 from repro.models import transformer as tfm
 from repro.models.transformer import BlockDims
@@ -115,21 +114,23 @@ class SplitProgram:
     def protocol_step(self, tower_params, server_params, features, ctx, *,
                       label_holder: int = 0, live_mask=None, ledger=None):
         """Serial reference step on this program's decomposition; returns
-        (loss, tower_grads, server_grads, ledger) like ``protocol_step``."""
+        (loss, tower_grads, server_grads, ledger) like ``protocol_step``.
+
+        Honors ``cfg.vertical.compression``: the reference workers compress
+        their cut uplinks (and the reference executor its jacobian
+        downlinks) exactly like the transport path — with zero
+        error-feedback residual, which is the step-0 state of any live run,
+        so ``train_split`` verifies its compressed step-0 gradients against
+        this."""
         from repro.core.protocol import protocol_step
 
+        v = self.cfg.vertical
         return protocol_step(
             self.tower_fwds, self.server_fwd, self.loss_fn, tower_params,
             server_params, features, ctx, self.merge,
             label_holder=label_holder, live_mask=live_mask, ledger=ledger,
+            compress=v.compression, topk_fraction=v.topk_fraction,
             **self.executor_kwargs)
-
-    def _compress(self, cut):
-        v = self.cfg.vertical
-        if v.compression is not None:
-            cut = comp_lib.apply_compression(
-                cut[None], v.compression, v.topk_fraction)[0]
-        return cut
 
     def _loader_feature_fn(self, *, batch: int, seq: int, seed: int,
                            microbatches: int, extract: Callable) -> Callable:
@@ -207,7 +208,10 @@ class TokenLMSplitProgram(SplitProgram):
             else:
                 h = tfm.dense_stack_apply(tp["blocks"], h, dims_t,
                                           causal=True, positions=positions)
-            return self._compress(h @ tp["proj_out"])
+            # cut compression happens at the transport boundary
+            # (TowerWorker, with error feedback), not in the tower math —
+            # the monolithic backbone path keeps its own in-graph STE
+            return h @ tp["proj_out"]
 
         return tower_fwd
 
@@ -282,7 +286,9 @@ class AudioSplitProgram(SplitProgram):
             h = h @ tp["proj_in"]
             h = tfm.dense_stack_apply(tp["blocks"], h, dims_t, causal=False,
                                       positions=positions)
-            return self._compress(h @ tp["proj_out"])
+            # compression is the transport boundary's job (TowerWorker,
+            # error feedback) — see TokenLMSplitProgram.tower_fwd
+            return h @ tp["proj_out"]
 
         return tower_fwd
 

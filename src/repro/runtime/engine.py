@@ -33,7 +33,7 @@ from typing import Callable, Optional
 import jax.numpy as jnp
 
 from repro.configs.vertical_mlp import MLPSplitConfig
-from repro.core.costs import mlp_forward_flops
+from repro.core.costs import mlp_forward_flops, wire_bytes
 from repro.core.merge import collective_bytes_per_merge, merged_dim
 from repro.core.protocol import Ledger
 from repro.runtime.clock import EventClock, Resource
@@ -69,6 +69,9 @@ class StepPlan:
     # every client uplinks its public value, role 0 relays the K-entry
     # directory back down, and only then do the step-0 forwards start
     keyx_bytes: int = 0
+    # cut compression scheme ("topk" | "int8" | None): already folded into
+    # cut_bytes (costs.wire_bytes), recorded here so reports name the codec
+    compress: Optional[str] = None
 
 
 def _keyx_bytes(secure: bool) -> int:
@@ -80,9 +83,16 @@ def _keyx_bytes(secure: bool) -> int:
 
 
 def plan_step(cfg: MLPSplitConfig, batch_size: int, microbatches: int = 1,
-              *, bytes_per_elt: int = 4, secure: bool = False) -> StepPlan:
+              *, bytes_per_elt: int = 4, secure: bool = False,
+              compress: Optional[str] = None,
+              topk_fraction: float = 0.25) -> StepPlan:
     """Build a :class:`StepPlan` from the paper-MLP config using the same
-    analytic FLOP model as repro.core.costs (Tables 5 & 6)."""
+    analytic FLOP model as repro.core.costs (Tables 5 & 6).  ``compress``
+    prices the cut uplinks AND jacobian downlinks (both clock
+    ``plan.cut_bytes``) at the codec's wire frame via ``costs.wire_bytes``."""
+    if secure and compress is not None:
+        raise ValueError("secure aggregation and cut compression cannot "
+                         "compose; plan one or the other")
     if batch_size % microbatches:
         raise ValueError(f"batch {batch_size} not divisible by M={microbatches}")
     mb = batch_size // microbatches
@@ -100,18 +110,25 @@ def plan_step(cfg: MLPSplitConfig, batch_size: int, microbatches: int = 1,
         tower_fwd_flops=fwd,
         tower_bwd_flops=tuple(2.0 * f for f in fwd),  # dL/dx + dL/dW
         server_flops=3.0 * server_fwd,
-        cut_bytes=mb * cfg.cut_dim * bytes_per_elt,
+        cut_bytes=wire_bytes((mb, cfg.cut_dim), bytes_per_elt, compress,
+                             topk_fraction),
         head_bytes=mb * cfg.num_classes * bytes_per_elt,
         merge=cfg.merge,
         cut_elements=mb * cfg.cut_dim,
         bytes_per_elt=bytes_per_elt,
         keyx_bytes=_keyx_bytes(secure),
+        compress=compress,
     )
+
+
+_FROM_CFG = object()  # sentinel: read the value off cfg.vertical
 
 
 def plan_from_arch(cfg, batch_size: int, seq_len: int, microbatches: int = 1,
                    *, bytes_per_elt: int = 4,
-                   secure: Optional[bool] = None) -> StepPlan:
+                   secure: Optional[bool] = None,
+                   compress=_FROM_CFG,
+                   topk_fraction: Optional[float] = None) -> StepPlan:
     """StepPlan for a vertically-split LM arch (repro.configs.base.ArchConfig).
 
     Towers are ``tower_layers`` transformer blocks at width d_model/K; the
@@ -119,13 +136,23 @@ def plan_from_arch(cfg, batch_size: int, seq_len: int, microbatches: int = 1,
     standard 2*(4 d^2 + 2 d d_ff) dense estimate.  The role-3 exchange is
     modeled at per-token-loss granularity (not full-vocab logits): the
     label holder returns loss jacobian summaries, labels ship out of band.
-    ``secure=None`` reads ``cfg.vertical.secure_aggregation``.
+    ``secure=None`` reads ``cfg.vertical.secure_aggregation``; ``compress``
+    and ``topk_fraction`` default to ``cfg.vertical.compression`` /
+    ``cfg.vertical.topk_fraction`` and price BOTH cut directions at the
+    codec's wire frame.
     """
     v = cfg.vertical
     if v is None:
         raise ValueError(f"{cfg.name} has no vertical config")
     if secure is None:
         secure = v.secure_aggregation
+    if compress is _FROM_CFG:
+        compress = v.compression
+    if topk_fraction is None:
+        topk_fraction = v.topk_fraction
+    if secure and compress is not None:
+        raise ValueError("secure aggregation and cut compression cannot "
+                         "compose; plan one or the other")
     if batch_size % microbatches:
         raise ValueError(f"batch {batch_size} not divisible by M={microbatches}")
     K = v.num_clients
@@ -147,12 +174,14 @@ def plan_from_arch(cfg, batch_size: int, seq_len: int, microbatches: int = 1,
         tower_fwd_flops=(tower,) * K,
         tower_bwd_flops=(2.0 * tower,) * K,
         server_flops=3.0 * server_fwd,
-        cut_bytes=tokens * d_t * bytes_per_elt,
+        cut_bytes=wire_bytes((tokens, d_t), bytes_per_elt, compress,
+                             topk_fraction),
         head_bytes=tokens * bytes_per_elt,
         merge=v.merge,
         cut_elements=tokens * d_t,
         bytes_per_elt=bytes_per_elt,
         keyx_bytes=_keyx_bytes(secure),
+        compress=compress,
     )
 
 

@@ -56,6 +56,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import compression as comp_lib
 from repro.core import merge as merge_lib
 from repro.core import straggler as straggler_lib
 from repro.core.merge import collective_bytes_per_merge
@@ -185,6 +186,20 @@ class Executor:
     (non-uniform cuts have no mask-cancelling sum), and any non-barrier
     execution (``nowait`` / EMA imputation — a dropped client's masks
     cannot cancel; there is no dropout-recovery round).
+
+    Cut compression (``compress`` = ``"topk"`` | ``"int8"``,
+    ``repro.core.compression``): the workers compress cut uplinks at the
+    source (error feedback per microbatch) and THIS side symmetrically
+    compresses the K jacobian downlinks, with its own per-(client, mb)
+    error-feedback residuals — steps are collected oldest-first, so the
+    per-stream carry is step-sequential at any window W.  The step ledger
+    records the codec's wire bytes (``compression.payload_bytes``) for
+    both directions, which must reconcile exactly with
+    ``costs.wire_bytes``.  Unsupported combinations raise here, loudly:
+    ``secure_agg`` (additive masks do not cancel through
+    quantized/sparsified values — the modular-mask gap Secure Forward
+    Aggregation addresses) and a program ``merge_fn`` (non-uniform cuts
+    have no single per-vector wire frame to audit).
     """
 
     def __init__(self, transport, server_fwd: Callable, loss_fn: Callable,
@@ -193,7 +208,8 @@ class Executor:
                  ema_decay: float = 0.95, deadline=None,
                  server_takes_batch: bool = False, server_aux: bool = False,
                  merge_fn: Optional[Callable] = None,
-                 secure_agg: bool = False, secure_scale: float = 1.0):
+                 secure_agg: bool = False, secure_scale: float = 1.0,
+                 compress: Optional[str] = None, topk_fraction: float = 0.25):
         if mode not in ("serial", "pipelined", "nowait"):
             raise ValueError(f"mode must be serial|pipelined|nowait, got {mode!r}")
         if drop_policy is None:
@@ -224,6 +240,24 @@ class Executor:
                     "leaves its pairwise masks uncancelled and the "
                     "aggregate unusable — there is no dropout-recovery "
                     f"round (got mode={mode!r}, drop_policy={drop_policy!r})")
+        if compress is not None:
+            if compress not in comp_lib.SCHEMES:
+                raise ValueError(
+                    f"unknown compression scheme {compress!r} (choose from "
+                    f"{comp_lib.SCHEMES})")
+            if secure_agg:
+                raise ValueError(
+                    "cut compression cannot compose with secure aggregation: "
+                    "additive masks do not cancel through "
+                    "quantized/sparsified values, so the merged sum would be "
+                    "garbage while the uplinks silently stop being blinded "
+                    "aggregates — run one or the other")
+            if merge_fn is not None:
+                raise ValueError(
+                    "cut compression cannot run under a program merge_fn "
+                    "(non-uniform cuts, e.g. the vlm sequence concat): the "
+                    "wire contract audits one k-per-vector frame per uplink, "
+                    "which a non-uniform concatenation does not have")
         self.transport = transport
         self.server_fwd = server_fwd
         self.loss_fn = loss_fn
@@ -238,6 +272,12 @@ class Executor:
         self.merge_fn = merge_fn
         self.secure_agg = secure_agg
         self.secure_scale = secure_scale
+        self.compress = compress
+        self.topk_fraction = topk_fraction
+        # error-feedback residuals for the jacobian downlinks, keyed by
+        # (client, mb): steps are collected oldest-first, so each stream
+        # position's carry advances one step at a time at any window W
+        self._jac_residuals: dict = {}
         self._secure_ready = False
         self._max_secure_step = -1  # highest masked step id (freshness)
         # one-time key-exchange round audit (keyx_pub/keyx_bcast tags)
@@ -254,7 +294,7 @@ class Executor:
             self.deadline = None
             self.static_deadline_s = float(deadline)
         self._schedule = step_schedule(transport.num_clients, label_holder,
-                                       secure=secure_agg)
+                                       secure=secure_agg, compress=compress)
         self._inflight: dict[int, _InflightStep] = {}  # insertion-ordered
         self._retired_first_t: dict[tuple[int, int], float] = {}
 
@@ -485,11 +525,25 @@ class Executor:
                 # serial/neutral semantics: jacobians flow to every client;
                 # no-wait: a missed deadline skips this microbatch's update
                 if self.drop_policy == "neutral" or live_row[k] > 0:
-                    st.ledger.record_spec(spec, cut_grads[k])
+                    jac_out = cut_grads[k]
+                    if self.compress is not None:
+                        # symmetric downlink compression with error
+                        # feedback: the residual this encode drops rides
+                        # into the next step's jacobian for the same
+                        # (client, mb) stream position
+                        jac_out, self._jac_residuals[(k, m)] = \
+                            comp_lib.compress_with_feedback(
+                                jac_out, self._jac_residuals.get((k, m)),
+                                self.compress, self.topk_fraction)
+                        st.ledger.record_spec_bytes(
+                            spec, comp_lib.payload_bytes(
+                                jac_out, self.compress, self.topk_fraction))
+                    else:
+                        st.ledger.record_spec(spec, jac_out)
                     st.sent_jacs[k] += 1
                     transport.submit(k, {
                         "op": "backward", "step": st.step, "mb": m,
-                        "jac": cut_grads[k],
+                        "jac": jac_out,
                     })
             losses.append(loss_m)
             server_grad_acc.append(sg)
@@ -583,7 +637,16 @@ class Executor:
             # genuinely late arrivals (mb already merged) observe their raw
             # spread — that is how a recovered straggler earns its way back
             self.deadline.observe(k, spread)
-        st.ledger.record_spec(self._schedule.cuts[k], resp["cut"])
+        if self.compress is not None:
+            # the payload is the worker's lossy encode; the ledger records
+            # the codec's wire bytes (bitmap+values / int8 frame), not the
+            # dense f32 carrier that crosses the loopback for convenience
+            st.ledger.record_spec_bytes(
+                self._schedule.cuts[k],
+                comp_lib.payload_bytes(resp["cut"], self.compress,
+                                       self.topk_fraction))
+        else:
+            st.ledger.record_spec(self._schedule.cuts[k], resp["cut"])
         if m in st.merged:
             return  # missed the merge: payload discarded at role 0
         st.cuts.setdefault(m, {})[k] = jnp.asarray(resp["cut"])

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint.msgpack_ckpt import save_checkpoint
 from repro.configs.base import ArchConfig
+from repro.core import compression as comp_lib
 from repro.models import backbone
 from repro.optim import AdamW
 from repro.optim.schedules import linear_warmup_cosine
@@ -131,7 +132,8 @@ def _make_transport(cfg: ArchConfig, transport: str, *, seed, batch, seq,
 
 
 def _verify_step0(res, program, tower_params, server_params, features, ctx,
-                  microbatches, atol, print_fn, masked=False):
+                  microbatches, atol, print_fn, masked=False,
+                  compressed=False):
     """The acceptance identity: the transport's step-0 gradients must match
     the serial ``protocol_step`` on the same program decomposition.
 
@@ -146,7 +148,14 @@ def _verify_step0(res, program, tower_params, server_params, features, ctx,
     MASKED cuts, the reference is the unmasked serial step, and the match
     (to the loosened ``atol``) is the in-run proof that the pairwise masks
     cancelled — role 0 computed the true aggregate without ever observing
-    a raw activation."""
+    a raw activation.
+
+    ``compressed`` labels the compressed-wire run: ``program.
+    protocol_step`` reads ``cfg.vertical.compression``, so the reference
+    compresses its cuts/jacobians exactly like the transport path with the
+    zero error-feedback residual every stream starts from — the match (to
+    ``compression.STEP0_VERIFY_ATOL``) proves the lossy wire carried the
+    step the codec defines, not silently degraded gradients."""
     M = microbatches
     B = jax.tree_util.tree_leaves(ctx)[0].shape[0]
     mbsz = B // M
@@ -170,7 +179,8 @@ def _verify_step0(res, program, tower_params, server_params, features, ctx,
         for a, b in zip(got, want)
     )
     loss_dev = abs(float(res.loss) - float(loss_ref))
-    what = "masked-merge " if masked else ""
+    what = "masked-merge " if masked else \
+        "compressed-wire " if compressed else ""
     if max_dev > atol or loss_dev > atol:
         raise RuntimeError(
             f"step-0 {what}gradients diverge from the serial protocol_step: "
@@ -238,6 +248,17 @@ def train_split(
     no-wait mode (a deadline-dropped client's masks cannot cancel) and
     ``merge_fn`` programs (the vlm sequence concat has no mask-cancelling
     sum).
+
+    Cut compression: ``cfg.vertical.compression`` ("topk" | "int8") makes
+    every worker compress its cut uplink at the source with error feedback
+    and the executor compress the jacobian downlinks symmetrically
+    (``repro.core.compression``); the step ledger then audits codec wire
+    bytes (``compressed_cut[k]`` / ``compressed_jac[k]``).  Step 0 is
+    verified against the serial ``protocol_step`` running the SAME
+    compression (zero residual — the step-0 state of any stream, at any W)
+    at the documented ``compression.STEP0_VERIFY_ATOL``.  Compression and
+    secure aggregation are rejected together before any worker spawns:
+    additive masks do not cancel through quantized/sparsified values.
     """
     from repro.models.split_program import get_program
     from repro.runtime.executor import Executor
@@ -253,6 +274,15 @@ def train_split(
 
     program = get_program(cfg)
     secure = cfg.vertical.secure_aggregation
+    compress = cfg.vertical.compression
+    if secure and compress is not None:
+        # fail actionably BEFORE spawning workers: quantized/sparsified
+        # values break the additive mask cancellation, so the run would be
+        # neither private nor correct
+        raise ValueError(
+            "compression and secure_aggregation cannot compose: additive "
+            "masks do not cancel through quantized/sparsified values.  "
+            "Run one or the other.")
     if secure:
         # fail actionably BEFORE spawning workers — a silently unmasked run
         # would be a privacy hole, not a degraded mode
@@ -312,11 +342,29 @@ def train_split(
             else:
                 ctx0 = program.batch_ctx(b0)
                 # masked merges carry the f32 mask-cancellation residue
-                # (secure_agg.cancellation_bound): loosen the tolerance
-                atol = max(verify_atol, 1e-3) if secure else verify_atol
+                # (secure_agg.cancellation_bound): loosen the tolerance.
+                # compressed wires verify against a reference running the
+                # same codec, at the documented compression tolerance
+                if secure:
+                    atol = max(verify_atol, 1e-3)
+                elif compress is not None:
+                    atol = max(verify_atol, comp_lib.STEP0_VERIFY_ATOL)
+                else:
+                    atol = verify_atol
                 _verify_step0(res, program, tower_params, server_params,
                               program.features(b0), ctx0, M, atol,
-                              print_fn, masked=secure)
+                              print_fn, masked=secure,
+                              compressed=compress is not None)
+                if compress is not None:
+                    comp_bytes = res.ledger.bytes_with_tag(
+                        executor._schedule.cuts[0].tag)
+                    cut0 = program.tower_fwds[0](
+                        tower_params[0], program.features(b0)[0][:batch // M])
+                    raw_bytes = M * comp_lib.payload_bytes(cut0, None)
+                    print_fn(
+                        f"compressed cut uplink ({compress}): {comp_bytes} B"
+                        f"/client/step vs {raw_bytes} B raw "
+                        f"({comp_bytes / raw_bytes:.2f}x)")
             if program.has_aux:
                 aux_bytes = res.ledger.bytes_with_tag("aux_loss")
                 print_fn(f"router aux loss {float(res.aux):.6f} "
@@ -347,7 +395,9 @@ def train_split(
         # spawned workers must not leak when it raises
         executor = Executor(tr, program.server_fwd, program.loss_fn,
                             program.merge, mode=mode, microbatches=M,
-                            secure_agg=secure, **program.executor_kwargs)
+                            secure_agg=secure, compress=compress,
+                            topk_fraction=cfg.vertical.topk_fraction,
+                            **program.executor_kwargs)
         if secure:
             kx = executor.setup_secure()
             print_fn(f"secure aggregation: pairwise key exchange complete "

@@ -15,6 +15,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import compression as comp_lib
 from repro.core import secure_agg
 
 
@@ -83,23 +84,48 @@ class TowerWorker:
     (``round_idx = step * microbatches + mb`` — unique per (step,
     microbatch) at any driver window W, so masks are never reused and
     consecutive uplinks cannot be differenced to raw activation deltas).
+
+    Cut compression (``compress`` = ``"topk"`` | ``"int8"``,
+    ``repro.core.compression``): every forward compresses its cut AT THE
+    SOURCE with error feedback — the residual a step's lossy encode drops
+    is kept per microbatch (``_ef_residual``) and folded into the NEXT
+    step's payload for that same stream position.  The accumulator is
+    stream state, not per-step state: requests arrive FIFO in (step, mb)
+    ascending order on every backend, so the step-sequential
+    carry-and-update is well-defined at any driver window W (step t+1's
+    forward for mb m can only arrive after step t's did, whatever else is
+    in flight).  Step-0 residuals are zero, which is what lets
+    ``train_split`` verify the compressed step-0 gradients against a
+    serial ``protocol_step`` running the same compression.  Compression
+    does not compose with secure aggregation (masks do not cancel through
+    quantized values); the worker refuses key exchange when compressing,
+    mirroring the Executor's constructor-time rejection.
     """
 
     def __init__(self, client_id: int, tower_fwd: Callable, tower_params, *,
                  feature_fn: Optional[Callable] = None, optimizer=None,
-                 forward_delay_s: float = 0.0):
+                 forward_delay_s: float = 0.0,
+                 compress: Optional[str] = None,
+                 topk_fraction: float = 0.25):
         self.client_id = client_id
         self.tower_fwd = tower_fwd
         self.params = tower_params
         self.feature_fn = feature_fn
         self.optimizer = optimizer
         self.forward_delay_s = forward_delay_s
+        if compress is not None and compress not in comp_lib.SCHEMES:
+            raise ValueError(
+                f"client {client_id}: unknown compression scheme "
+                f"{compress!r} (choose from {comp_lib.SCHEMES})")
+        self.compress = compress
+        self.topk_fraction = topk_fraction
         self.opt_state = optimizer.init(tower_params) if optimizer else None
         self._feats: dict = {}  # (step, mb) -> feats awaiting backward
         self._step_params: dict = {}  # step -> params its forwards ran under
         self._grad_sums: dict = {}  # step -> accumulated tower grads
         self._jacs_seen: dict = {}  # step -> backwards processed
         self._pending_finish: dict = {}  # step -> deferred finish request
+        self._ef_residual: dict = {}  # mb -> error-feedback residual carry
         self._dh_secret: Optional[int] = None  # ephemeral, key exchange only
         self._secure: Optional[dict] = None  # pair keys + round derivation
 
@@ -159,10 +185,23 @@ class TowerWorker:
             cut = secure_agg.mask_payload_with_keys(
                 cut, sec["pair_keys"], self.client_id, round_idx,
                 sec["scale"])
+        if self.compress is not None:
+            # compress at the source with error feedback: fold in what the
+            # previous step's encode dropped for this stream position, ship
+            # the lossy payload, carry the new leftover.  FIFO delivery
+            # makes the per-mb carry step-sequential at any driver window W
+            cut, self._ef_residual[mb] = comp_lib.compress_with_feedback(
+                cut, self._ef_residual.get(mb), self.compress,
+                self.topk_fraction)
         return {"op": "cut", "client": self.client_id, "step": step,
                 "mb": mb, "cut": cut}
 
     def _key_exchange(self, request: dict) -> dict:
+        if self.compress is not None:
+            raise ValueError(
+                f"client {self.client_id}: compression ({self.compress}) "
+                "cannot compose with secure aggregation — additive masks do "
+                "not cancel through quantized/sparsified values")
         phase = request["phase"]
         if phase == "pub":
             self._dh_secret, pub = secure_agg.dh_keypair()

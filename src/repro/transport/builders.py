@@ -35,7 +35,9 @@ def _sgd(learning_rate: float):
 def build_mlp_worker(client_id: int, *, cfg, param_seed: int = 0,
                      data_seed: int = 0, batch: int = 16,
                      microbatches: int = 1, learning_rate: Optional[float] = None,
-                     forward_delay_s: float = 0.0) -> TowerWorker:
+                     forward_delay_s: float = 0.0,
+                     compress: Optional[str] = None,
+                     topk_fraction: float = 0.25) -> TowerWorker:
     """Paper-MLP feature holder: regenerates the shared seeded init, keeps
     only its own tower, and serves its own feature columns of the synthetic
     stream ``x_step ~ N(0, 1)`` keyed by ``data_seed + step``."""
@@ -55,6 +57,7 @@ def build_mlp_worker(client_id: int, *, cfg, param_seed: int = 0,
         client_id, towers.mlp_tower_apply, tower, feature_fn=feature_fn,
         optimizer=_sgd(learning_rate) if learning_rate else None,
         forward_delay_s=forward_delay_s,
+        compress=compress, topk_fraction=topk_fraction,
     )
 
 
@@ -82,6 +85,11 @@ def build_split_worker(client_id: int, *, cfg, seed: int = 0, batch: int = 8,
     cross-step pipelined drivers (``--inflight-steps W``) out of the box:
     at W > 1 its params train on delayed gradients, one optimizer update
     behind the submitted forward.
+
+    ``cfg.vertical.compression`` is honored at the transport boundary: the
+    worker compresses its cut uplinks at the source with error feedback
+    (``repro.core.compression``) — picklable config, so spawned multiproc
+    children compress identically to inproc/sim workers.
     """
     from repro.models import backbone, split_program
     from repro.optim import AdamW
@@ -104,6 +112,8 @@ def build_split_worker(client_id: int, *, cfg, seed: int = 0, batch: int = 8,
                                       seed=seed, microbatches=microbatches),
         optimizer=optimizer,
         forward_delay_s=forward_delay_s,
+        compress=cfg.vertical.compression,
+        topk_fraction=cfg.vertical.topk_fraction,
     )
 
 

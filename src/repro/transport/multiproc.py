@@ -186,9 +186,18 @@ class MultiprocTransport(Transport):
                 pass
         for p in self._procs:
             p.join(timeout=10.0)
+        # a child that missed the shutdown message (hung forward, wedged
+        # socket) must not outlive the transport: escalate terminate ->
+        # kill, JOINING after each signal — a bare terminate() with no
+        # follow-up join leaks a zombie and wedges CI on interpreter exit
         for p in self._procs:
             if p.is_alive():
                 p.terminate()
+                p.join(timeout=5.0)
+        for p in self._procs:
+            if p.is_alive():
+                p.kill()
+                p.join(timeout=5.0)
         for conn in self._conns:
             if conn is not None:
                 conn.close()

@@ -15,3 +15,15 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 @pytest.fixture(scope="session")
 def key():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _bound_xla_cache_growth():
+    """Drop jit/tracing caches after every test module.  The in-process
+    executable cache is unbounded, and a full-suite run accumulates
+    hundreds of compiled programs (every split-exec test compiles its own
+    tower/server/grad functions); past a threshold XLA's CPU backend
+    segfaults inside ``backend_compile`` on the next large scan compile.
+    Per-module recompiles cost a few seconds; a segfault costs the run."""
+    yield
+    jax.clear_caches()

@@ -33,7 +33,7 @@ def test_int8_gradient_is_straight_through():
 
 
 def test_wire_bytes_ordering():
-    """int8 < topk(25%, values+indices) < raw f32 for realistic cut widths."""
+    """int8 < topk(25%, bitmap+values) < raw f32 for realistic cut widths."""
     shape, fb = (32, 1024), 4
     raw = comp.wire_bytes(shape, fb, None)
     topk = comp.wire_bytes(shape, fb, "topk", 0.25)
@@ -48,3 +48,79 @@ def test_wire_bytes_ordering():
 def test_unknown_scheme_raises():
     with pytest.raises(ValueError):
         comp.apply_compression(jnp.zeros(4), "gzip")
+
+
+def test_topk_keeps_exactly_k_on_ties():
+    """The tie regression: >=-cutoff selection kept every tied entry,
+    breaking the k-per-vector wire contract.  Ties break by ascending
+    index, so exactly k survive even on constant input."""
+    ones = jnp.ones((4, 8))
+    out = comp.topk_sparsify(ones, 0.25)
+    assert int((out != 0).sum()) == 4 * comp.topk_count(8, 0.25)
+    np.testing.assert_allclose(out[:, :2], 1.0)  # lowest indices win
+    np.testing.assert_allclose(out[:, 2:], 0.0)
+    # partial tie straddling the cutoff: |x| = [2, 2, 2, 1], k = 2
+    out = comp.topk_sparsify(jnp.asarray([[2.0, -2.0, 2.0, 1.0]]), 0.5)
+    np.testing.assert_allclose(out, [[2.0, -2.0, 0.0, 0.0]])
+
+
+def test_topk_bitmap_wire_format():
+    """The STC frame: per vector, a D-bit coordinate bitmap + k values.
+    At fraction 0.25 / f32 that is 0.28125x raw — under the 0.35x bound
+    the benchmarks assert."""
+    D, vecs = 1024, 32
+    k = comp.topk_count(D, 0.25)
+    got = comp.wire_bytes((vecs, D), 4, "topk", 0.25)
+    assert got == vecs * (D // 8 + k * 4)
+    assert got / comp.wire_bytes((vecs, D), 4, None) == 0.28125 <= 0.35
+    # odd widths round the bitmap up to whole bytes
+    assert comp.wire_bytes((1, 10), 4, "topk", 0.1) == (10 + 7) // 8 + 4
+
+
+def test_int8_clamps_codes_and_guards_nonfinite():
+    """inf/nan must not poison the vector's scale or decode to garbage:
+    non-finite entries encode as 0.0 and every finite entry still
+    roundtrips within one quantization step of the FINITE range."""
+    x = jnp.asarray([[1.0, jnp.inf, -2.0, jnp.nan, 3.0, -jnp.inf, 0.5, 2.5]])
+    deq = comp.int8_quantize(x)
+    assert bool(jnp.isfinite(deq).all())
+    finite = jnp.isfinite(x)
+    np.testing.assert_allclose(jnp.where(finite, deq, 0.0), deq)
+    step = (3.0 - (-2.0)) / 255.0  # finite-range scale, not inf
+    err = jnp.abs(jnp.where(finite, deq - x, 0.0))
+    assert float(err.max()) <= step / 2 + 1e-6
+    # degenerate constant vector: clamp keeps codes in [0, 255], exact decode
+    np.testing.assert_allclose(comp.int8_quantize(jnp.full((2, 4), 7.0)),
+                               7.0, atol=1e-5)
+
+
+def test_payload_bytes_matches_wire_bytes():
+    """The ledger-vs-costs audit invariant: on any compressed payload —
+    including all-tied magnitudes — ``payload_bytes`` equals the analytic
+    ``wire_bytes`` claim."""
+    rand = jax.random.normal(jax.random.PRNGKey(3), (16, 64))
+    for x in (rand, jnp.ones((16, 64))):
+        for scheme in comp.SCHEMES:
+            y = comp.apply_compression(x, scheme, 0.25)
+            assert (comp.payload_bytes(y, scheme, 0.25)
+                    == comp.wire_bytes(x.shape, 4, scheme, 0.25))
+    assert comp.payload_bytes(rand, None) == rand.size * 4
+
+
+def test_compress_with_feedback_recursion():
+    """One EF step: compressed + residual reconstructs the target exactly,
+    None/stale residuals restart from zero (the step-0 state)."""
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, 16))
+    for scheme in comp.SCHEMES:
+        c0, r0 = comp.compress_with_feedback(x, None, scheme, 0.25)
+        np.testing.assert_allclose(c0, comp.apply_compression(x, scheme, 0.25))
+        np.testing.assert_allclose(c0 + r0, x, atol=1e-6)
+        c1, r1 = comp.compress_with_feedback(x, r0, scheme, 0.25)
+        np.testing.assert_allclose(c1 + r1, x + r0, atol=1e-6)
+        # a residual whose shape no longer matches resets to zero
+        stale = jnp.zeros((2, 16))
+        c2, _ = comp.compress_with_feedback(x, stale, scheme, 0.25)
+        np.testing.assert_allclose(c2, c0)
+    # scheme=None is the identity and carries the residual through
+    c, r = comp.compress_with_feedback(x, None, None)
+    assert c is x and r is None

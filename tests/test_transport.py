@@ -232,6 +232,9 @@ def test_multiproc_loopback_matches_protocol_and_costs():
         executor = Executor(tr, towers.mlp_tower_apply, loss_fn, cfg.merge,
                             mode="pipelined", microbatches=M)
         res = executor.run_step(params["server"], y, step=0)
+    # close() must not leak children: the shutdown handshake (escalated to
+    # terminate/kill for a wedged child) leaves no surviving processes
+    assert not any(p.is_alive() for p in tr._procs)
 
     np.testing.assert_allclose(res.loss, loss_s, atol=1e-5, rtol=1e-5)
     _assert_trees_close((res.tower_grads, res.server_grads), (tg_s, sg_s))
