@@ -414,6 +414,112 @@ def bench_split_pipeline(out: dict, *, full: bool = False) -> None:
           f"{predicted_speedup:.2f}x")
 
 
+def bench_tree_sweep(out: dict) -> None:
+    """Hierarchical-aggregation K-sweep: star vs fanout-2 tree
+    (``runtime.topology.AggTree``) on the paper-MLP program, K in
+    {4, 8, 16}, real execution over InprocTransport at window W=2 with
+    M=2 microbatches.  Rows carry the measured per-step wall-clock, the
+    audited role-0 per-step cut bytes (the O(K) -> O(F) reduction the tree
+    exists for), and the pipelined clock's prediction of the same schedule
+    on a link model with a FINITE role-0 NIC — the simulator half of the
+    crossover claim."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.vertical_mlp import MLPSplitConfig
+    from repro.core import split_model, towers
+    from repro.runtime import (AggTree, LinkModel, StepPipeline, plan_step,
+                               simulate_pipelined)
+    from repro.runtime.executor import Executor
+    from repro.transport import InprocTransport, TowerWorker
+
+    # wide cut (4 MB/frame) so the role-0 merge is real memory-bandwidth
+    # work: the star stacks K frames on the collector thread while the tree
+    # sums them in the relay workers (jnp adds release the GIL, so relay
+    # partial sums genuinely run in parallel)
+    batch, M, W, steps = 256, 1, 2, 4
+    rows = []
+    for K in (4, 8, 16):
+        cfg = MLPSplitConfig(
+            name=f"tree_bench_k{K}", input_dim=16 * K, num_classes=2,
+            num_clients=K, client_feature_sizes=(16,) * K,
+            tower_hidden=(32,), cut_dim=4096, server_hidden=(64,),
+            merge="avg",
+        )
+        params = split_model.init_split_mlp(jax.random.PRNGKey(0), cfg)
+        ks = jax.random.split(jax.random.PRNGKey(1), 2)
+        x = jax.random.normal(ks[0], (batch, cfg.input_dim))
+        y = jax.random.randint(ks[1], (batch,), 0, cfg.num_classes)
+        slices = split_model.feature_slices(cfg)
+        feats = [x[:, jnp.asarray(s.indices)] for s in slices]
+
+        def loss_fn(logits, labels):
+            return split_model.softmax_xent(logits, labels, cfg.num_classes)
+
+        def timed(tree):
+            workers = [TowerWorker(k, towers.mlp_tower_apply,
+                                   params["towers"][k]) for k in range(K)]
+            tr = InprocTransport(workers)
+            ex = None
+            try:
+                ex = Executor(tr, towers.mlp_tower_apply, loss_fn,
+                              cfg.merge, mode="pipelined", microbatches=M,
+                              agg_tree=tree)
+                res = ex.run_step(params["server"], y, features=feats,
+                                  collect_grads=False)  # warm / trace
+                pipeline = StepPipeline(ex, window=W)
+                t0 = time.time()
+                for s in range(1, steps + 1):
+                    pipeline.push(params["server"], y, step=s,
+                                  features=feats, collect_grads=False)
+                pipeline.flush(params["server"], collect_grads=False)
+                dt = (time.time() - t0) / steps
+            finally:
+                # tree runs wrap the transport in a TreeRouter — close THAT
+                (ex.transport if ex is not None else tr).close()
+            ledger = res.ledger
+            if tree is None:
+                role0_rx = sum(ledger.bytes_with_tag(f"cut[{k}]")
+                               for k in range(K))
+            else:
+                role0_rx = ledger.bytes_with_tag("tree_cut[0]")
+            return dt, role0_rx
+
+        star_dt, star_rx = timed(None)
+        tree_dt, tree_rx = timed(AggTree(num_clients=K, fanout=2))
+
+        link = LinkModel.uniform(K, server_bandwidth_bps=1e8)
+        sim_star = simulate_pipelined(
+            plan_step(cfg, batch_size=batch, microbatches=M), link,
+            steps=steps, cross_step=W).step_time_s
+        sim_tree = simulate_pipelined(
+            plan_step(cfg, batch_size=batch, microbatches=M, tree_fanout=2),
+            link, steps=steps, cross_step=W).step_time_s
+
+        rows.append({
+            "clients": K, "fanout": 2, "window": W, "microbatches": M,
+            "star_step_time_ms": star_dt * 1e3,
+            "tree_step_time_ms": tree_dt * 1e3,
+            "measured_speedup": star_dt / tree_dt,
+            "star_role0_cut_bytes_per_step": star_rx,
+            "tree_role0_cut_bytes_per_step": tree_rx,
+            "role0_bytes_ratio": star_rx / tree_rx,
+            "sim_star_step_time_ms": sim_star * 1e3,
+            "sim_tree_step_time_ms": sim_tree * 1e3,
+            "sim_speedup": sim_star / sim_tree,
+        })
+        _emit(f"tree/star_k{K}", star_dt * 1e6, f"role0_rx={star_rx}B")
+        _emit(f"tree/tree_k{K}", tree_dt * 1e6,
+              f"{star_dt / tree_dt:.2f}x_vs_star "
+              f"sim {sim_star / sim_tree:.2f}x "
+              f"role0_rx={tree_rx}B")
+    out["tree_sweep"] = rows
+    crossover = next((r["clients"] for r in rows if r["sim_speedup"] > 1.0),
+                     None)
+    print(f"tree_sweep: finite-NIC clock predicts tree(F=2) wins from "
+          f"K={crossover}")
+
+
 def run_paper_tables(steps: int, out: dict) -> None:
     from benchmarks import paper_tables as pt
 
@@ -436,7 +542,7 @@ def run_paper_tables(steps: int, out: dict) -> None:
 
 
 SECTIONS = ("kernels", "runtime", "transport", "split_exec",
-            "split_pipeline", "tables")
+            "split_pipeline", "tree", "tables")
 
 
 def main(argv=None) -> int:
@@ -478,6 +584,8 @@ def main(argv=None) -> int:
         bench_split_exec(out)
     if want("split_pipeline"):
         bench_split_pipeline(out, full=args.full)
+    if want("tree"):
+        bench_tree_sweep(out)
     steps = 400 if args.full else 60
     if want("tables"):
         run_paper_tables(steps, out)
@@ -501,16 +609,21 @@ def main(argv=None) -> int:
         print(to_markdown(rows))
 
     for name in ("runtime", "transport", "split_exec", "split_pipeline",
-                 "table2", "table3", "table4", "table5", "table6"):
+                 "tree_sweep", "table2", "table3", "table4", "table5",
+                 "table6"):
         if name in out:
             print(f"\n== {name} ==")
             for row in out[name]:
                 print(" ", {k: (round(v, 4) if isinstance(v, float) else v)
                             for k, v in row.items()})
-    if args.bench_json and ("split_exec" in out or "split_pipeline" in out):
+    if args.bench_json and any(k in out for k in
+                               ("split_exec", "split_pipeline",
+                                "tree_sweep")):
         # the machine-readable perf artifact CI uploads: wall-clock per
-        # family and per transport, serial (W=1) vs cross-step (W>1)
-        artifact = {k: out[k] for k in ("split_exec", "split_pipeline")
+        # family and per transport, serial (W=1) vs cross-step (W>1), plus
+        # the star-vs-tree aggregation K-sweep
+        artifact = {k: out[k] for k in ("split_exec", "split_pipeline",
+                                        "tree_sweep")
                     if k in out}
         json.dump(artifact, open(args.bench_json, "w"), indent=1,
                   default=str)

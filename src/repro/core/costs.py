@@ -91,6 +91,35 @@ def masked_cut_bytes(batch_size: int, cut_dim: int) -> int:
     return batch_size * cut_dim * 4
 
 
+def tree_cut_bytes(tree, cut_bytes: int, microbatches: int = 1) -> dict:
+    """Byte model of one step's cut traffic under an aggregation tree
+    (``runtime.topology.AggTree``, duck-typed), cross-checked against the
+    executor's per-level ``tree_cut[l]`` / ``tree_jac[l]`` ledger tags.
+
+    Every tree edge carries exactly ONE combined frame per microbatch in
+    each direction (a relay partial-sums its subtree before uplinking, and
+    forwards the shared head jacobian back down), and partial sums keep the
+    uniform cut shape, so level l carries ``len(edges_at_level(l))``
+    frames of ``cut_bytes`` each way.  Role 0 therefore pays only the
+    ``min(F, K)`` level-0 edges per microbatch per direction — the
+    O(K) -> O(F) headline — while total wire bytes stay K frames per
+    direction (same as the star; the tree moves WHERE the merge happens,
+    not how much crosses the network)."""
+    per_level = {
+        level: len(tree.edges_at_level(level)) * cut_bytes * microbatches
+        for level in range(tree.depth)
+    }
+    total = sum(per_level.values())
+    return {
+        "cut_bytes_per_level": per_level,
+        "jac_bytes_per_level": dict(per_level),  # symmetric downlink
+        "role0_received": per_level[0],
+        "role0_sent": per_level[0],
+        "total_cut_bytes": total,
+        "star_role0_received": tree.num_clients * cut_bytes * microbatches,
+    }
+
+
 def wire_bytes(shape, dtype_bytes: int = 4, scheme=None,
                topk_fraction: float = 0.25) -> int:
     """Bytes of one cut/jacobian payload under a compression scheme — THE
@@ -147,6 +176,7 @@ def advise_split_depth(
     microbatches: int = 4,
     latency_s: float = 0.0,
     cross_step: int = 1,
+    tree_fanout=None,
 ) -> dict:
     """The paper's §4.4 placement guidance, made executable — and, beyond
     the paper, runtime-aware.
@@ -175,6 +205,13 @@ def advise_split_depth(
     tower forwards overlap step t's server backward, amortized over a
     short multi-step run, so the sweep sees the same overlap the
     cross-step executor delivers.
+
+    ``tree_fanout`` clocks the simulated objectives with a fanout-F
+    aggregation tree (``runtime.topology.AggTree``): role 0 serializes
+    only ``min(F, K)`` uplink arrivals and jacobian sends per microbatch,
+    with the remaining merge work distributed onto relay clients — so the
+    sweep sees the same reduced role-0 serialization the tree executor
+    delivers.  Additive merges only (plan_step rejects otherwise).
 
     Returns the recommended tower depth (in units of the configured hidden
     stack) plus the per-candidate step times (simulated objectives) or the
@@ -242,7 +279,7 @@ def advise_split_depth(
         depth: plan_step(
             dataclasses.replace(cfg, tower_hidden=stack[:depth],
                                 server_hidden=stack[depth:]),
-            batch_size, microbatches)
+            batch_size, microbatches, tree_fanout=tree_fanout)
         for depth in range(min_private_layers, len(stack) + 1)
     }
     times, recommended = _clock_placements(plans, link, objective, cross_step)
@@ -272,6 +309,7 @@ def advise_arch_split_depth(
     cross_step: int = 1,
     latency_s: float = 1e-3,
     min_tower_layers: int = 1,
+    tree_fanout=None,
 ) -> dict:
     """Runtime-aware tower-depth placement for LM-scale arch configs.
 
@@ -315,7 +353,7 @@ def advise_arch_split_depth(
     plans = {
         depth: plan_from_arch(
             cfg.with_vertical(dataclasses.replace(v, tower_layers=depth)),
-            batch_size, seq_len, microbatches)
+            batch_size, seq_len, microbatches, tree_fanout=tree_fanout)
         for depth in range(min_tower_layers, cfg.num_layers)
     }
     times, recommended = _clock_placements(plans, link, objective, cross_step)

@@ -60,9 +60,12 @@ def merge_stacked(
     if strategy == "mul":
         masked = jnp.where(lv > 0, outputs, jnp.ones_like(outputs))
         return jnp.prod(masked, axis=0)
-    # concat: dropped clients contribute zeros (the server still sees K*D)
+    # concat: dropped clients contribute zeros (the server still sees K*D).
+    # Single moveaxis+reshape, not a K-way concatenate of per-k slices —
+    # one layout op instead of K gathers, and bit-identical output.
     masked = outputs * lv
-    return jnp.concatenate([masked[k] for k in range(K)], axis=-1)
+    moved = jnp.moveaxis(masked, 0, -2)  # (..., K, D)
+    return moved.reshape(*moved.shape[:-2], K * outputs.shape[-1])
 
 
 def merge_stacked_vjp_check(strategy: str) -> None:
@@ -109,10 +112,11 @@ def merge_collective(
             jnp.where(lv > 0, local_out, jnp.ones_like(local_out)), axis_name
         )
         return jnp.prod(gathered, axis=0)
-    # concat along features
+    # concat along features: same single moveaxis+reshape as merge_stacked
     gathered = jax.lax.all_gather(local_out * lv, axis_name)  # (K, ..., D)
     K = gathered.shape[0]
-    return jnp.concatenate([gathered[k] for k in range(K)], axis=-1)
+    moved = jnp.moveaxis(gathered, 0, -2)  # (..., K, D)
+    return moved.reshape(*moved.shape[:-2], K * local_out.shape[-1])
 
 
 def merged_dim(strategy: str, cut_dim: int, num_clients: int) -> int:

@@ -86,8 +86,9 @@ class MessageSpec:
     sender: str
     receiver: str
     tag: str
-    # "cut" | "masked_cut" | "compressed_cut" | "head_out" | "aux"
-    # | "head_jac" | "jac" | "compressed_jac" | "keyx_pub" | "keyx_bcast"
+    # "cut" | "masked_cut" | "compressed_cut" | "tree_cut" | "head_out"
+    # | "aux" | "head_jac" | "jac" | "compressed_jac" | "tree_jac"
+    # | "keyx_pub" | "keyx_bcast"
     kind: str
     client: Optional[int] = None
 
@@ -124,7 +125,19 @@ class StepSchedule:
     those codec bytes and the StepPlan simulators clock them.  ``secure``
     and ``compress`` are mutually exclusive: additive masks do not cancel
     through quantized/sparsified values, so composing them would silently
-    break the only-the-sum-is-meaningful privacy claim."""
+    break the only-the-sum-is-meaningful privacy claim.
+
+    A schedule built with a ``tree`` (:class:`~repro.runtime.topology.
+    AggTree`) re-routes the per-client messages along the aggregation
+    tree: client k's cut uplink goes to its RELAY PARENT (or role 0 for
+    top-level clients) under the ``tree_cut[level]`` tag, and its jacobian
+    arrives FROM that parent under ``tree_jac[level]`` — so
+    ``Ledger.received_by("role0")`` counts only the ``min(F, K)`` top-level
+    frames per microbatch, which is the O(K) -> O(F) headline, while the
+    per-level tags keep the full per-edge byte audit exact
+    (``costs.tree_cut_bytes``).  Tree routing composes with ``secure``
+    (partial sums of masked cuts still cancel at the root) and is mutually
+    exclusive with ``compress`` (codec frames cannot be partial-summed)."""
 
     cuts: tuple[MessageSpec, ...]
     head_out: MessageSpec
@@ -135,29 +148,62 @@ class StepSchedule:
     key_bcasts: tuple[MessageSpec, ...] = ()
     secure: bool = False
     compress: Optional[str] = None
+    # duck-typed AggTree (parent/edge_level/top_level/subtree) — kept
+    # loose so core does not import runtime.topology
+    tree: Optional[object] = None
 
 
 def step_schedule(num_clients: int, label_holder: int = 0, *,
                   secure: bool = False,
-                  compress: Optional[str] = None) -> StepSchedule:
+                  compress: Optional[str] = None,
+                  tree=None) -> StepSchedule:
     if secure and compress is not None:
         raise ValueError(
             "secure aggregation and cut compression cannot compose: "
             "additive masks do not cancel through quantized/sparsified "
             "values — run one or the other")
+    if tree is not None and compress is not None:
+        raise ValueError(
+            "the aggregation tree and cut compression cannot compose: "
+            "relays partial-sum raw (or masked) cut tensors, and codec "
+            "frames cannot be partial-summed — run one or the other")
     cut_kind = ("masked_cut" if secure
                 else "compressed_cut" if compress is not None else "cut")
     jac_kind = "compressed_jac" if compress is not None else "jac"
-    cuts = tuple(
-        MessageSpec(_role_of(k, label_holder), "role0",
-                    f"{cut_kind}[{k}]", cut_kind, k)
-        for k in range(num_clients)
-    )
-    jacs = tuple(
-        MessageSpec("role0", _role_of(k, label_holder), f"{jac_kind}[{k}]",
-                    jac_kind, k)
-        for k in range(num_clients)
-    )
+    if tree is not None:
+        if getattr(tree, "num_clients", None) != num_clients:
+            raise ValueError(
+                f"tree covers {getattr(tree, 'num_clients', None)} clients, "
+                f"schedule has {num_clients}")
+        # per-edge routing: client k uplinks to its relay parent (role 0
+        # for top level) under the per-LEVEL tree tag; the jacobian
+        # arrives back down the same edge.
+        def _hop(k):
+            p = tree.parent(k)
+            return ("role0" if p is None else _role_of(p, label_holder),
+                    tree.edge_level(k))
+
+        cuts = tuple(
+            MessageSpec(_role_of(k, label_holder), _hop(k)[0],
+                        f"tree_cut[{_hop(k)[1]}]", "tree_cut", k)
+            for k in range(num_clients)
+        )
+        jacs = tuple(
+            MessageSpec(_hop(k)[0], _role_of(k, label_holder),
+                        f"tree_jac[{_hop(k)[1]}]", "tree_jac", k)
+            for k in range(num_clients)
+        )
+    else:
+        cuts = tuple(
+            MessageSpec(_role_of(k, label_holder), "role0",
+                        f"{cut_kind}[{k}]", cut_kind, k)
+            for k in range(num_clients)
+        )
+        jacs = tuple(
+            MessageSpec("role0", _role_of(k, label_holder),
+                        f"{jac_kind}[{k}]", jac_kind, k)
+            for k in range(num_clients)
+        )
     key_pubs = tuple(
         MessageSpec(_role_of(k, label_holder), "role0", f"keyx_pub[{k}]",
                     "keyx_pub", k)
@@ -177,6 +223,7 @@ def step_schedule(num_clients: int, label_holder: int = 0, *,
         key_pubs=key_pubs,
         key_bcasts=key_bcasts,
         secure=secure,
+        tree=tree,
     )
 
 

@@ -58,6 +58,15 @@ Examples:
       --steps 5 --batch 4 --seq 64 --transport multiproc \\
       --compress topk --topk-fraction 0.25
 
+  # HIERARCHICAL AGGREGATION (repro.runtime.topology): overlay a fanout-2
+  # tree on the federation — relay workers partial-sum their subtree's cut
+  # uplinks and role 0 merges/fans-out only min(F, K) frames per
+  # microbatch instead of K (composes with --secure-agg; step 0 verifies
+  # the reassociated f32 merge to TREE_VERIFY_ATOL):
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \\
+      --steps 5 --batch 4 --seq 64 --clients 8 --transport inproc \\
+      --runtime pipelined --microbatches 2 --agg-tree-fanout 2
+
   # split execution is family-agnostic (repro.models.split_program): moe
   # ships its router aux loss through the protocol's role-0 -> role-3 aux
   # slot, audio trains mel-band encoder towers, vlm by-source modality
@@ -222,6 +231,14 @@ def main(argv=None):
     ap.add_argument("--topk-fraction", type=float, default=0.25,
                     help="fraction of cut entries kept per vector under "
                          "--compress topk")
+    ap.add_argument("--agg-tree-fanout", type=int, default=None,
+                    help="overlay a fanout-F aggregation tree on split "
+                         "execution (repro.runtime.topology): relay workers "
+                         "partial-sum their subtree's cut uplinks so role 0 "
+                         "merges/fans-out min(F, K) frames per microbatch "
+                         "instead of K.  Additive merges (sum/avg) only; "
+                         "composes with --secure-agg, mutually exclusive "
+                         "with --compress and --runtime nowait")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -278,6 +295,32 @@ def main(argv=None):
                 cfg.vertical, secure_aggregation=True))
         except ValueError as e:  # non-additive merge rejected by the config
             raise SystemExit(f"--secure-agg: {e}")
+    if args.agg_tree_fanout is not None:
+        if args.transport == "sim":
+            raise SystemExit(
+                "--agg-tree-fanout needs split execution (--transport "
+                "inproc/multiproc): the sim path runs the monolithic jitted "
+                "step, there are no relay workers to aggregate at")
+        if args.agg_tree_fanout < 2:
+            raise SystemExit(
+                f"--agg-tree-fanout must be >= 2, got {args.agg_tree_fanout} "
+                "(fanout 1 is a chain — every hop still serializes and role "
+                "0 gains nothing)")
+        if args.compress:
+            raise SystemExit(
+                "--agg-tree-fanout cannot run with --compress: relays "
+                "cannot partial-sum sparse/quantized frames without "
+                "breaking each stream's error-feedback state")
+        if args.runtime == "nowait":
+            raise SystemExit(
+                "--agg-tree-fanout cannot run with --runtime nowait: a "
+                "combined tree frame has no per-client arrival to deadline "
+                "or EMA-impute")
+        if cfg.vertical is not None and cfg.vertical.merge not in ("sum", "avg"):
+            raise SystemExit(
+                f"--agg-tree-fanout requires an additive merge (sum/avg); "
+                f"relay partial sums are not the true "
+                f"{cfg.vertical.merge!r} merge")
     if args.transport != "sim":
         # every family has a registered SplitProgram — this only rejects a
         # config with no vertical section (checked above) or an unknown
@@ -322,12 +365,14 @@ def main(argv=None):
             microbatches=args.microbatches,
             inflight_steps=args.inflight_steps, learning_rate=args.lr,
             seed=args.seed, straggler=args.straggler,
+            agg_tree_fanout=args.agg_tree_fanout,
         )
         summary = metrics.summary()
         summary.update(arch=cfg.name, params=n_params, steps=args.steps,
                        vertical=args.vertical, transport=args.transport,
                        inflight_steps=args.inflight_steps,
-                       secure_agg=args.secure_agg, compress=args.compress)
+                       secure_agg=args.secure_agg, compress=args.compress,
+                       agg_tree_fanout=args.agg_tree_fanout)
         if report is not None:
             summary["runtime"] = {
                 "mode": report.mode,

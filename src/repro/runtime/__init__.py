@@ -58,9 +58,12 @@ from repro.runtime.executor import (
 )
 from repro.runtime.links import LinkModel
 from repro.runtime.pipeline import StepPipeline
+from repro.runtime.topology import TREE_VERIFY_ATOL, AggTree
 
 __all__ = [
     "AdaptiveDeadline",
+    "AggTree",
+    "TREE_VERIFY_ATOL",
     "EventClock",
     "ExecReport",
     "ExecutionResult",

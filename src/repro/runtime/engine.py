@@ -72,6 +72,12 @@ class StepPlan:
     # cut compression scheme ("topk" | "int8" | None): already folded into
     # cut_bytes (costs.wire_bytes), recorded here so reports name the codec
     compress: Optional[str] = None
+    # aggregation-tree fanout F (runtime.topology.AggTree) or None for the
+    # star: the simulators clock relay partial-sum merges on the relays'
+    # CPUs and serialize only the min(F, K) top-level frames through
+    # role 0's NIC and merge path — the per-level link structure of
+    # StepPlan under a tree
+    tree_fanout: Optional[int] = None
 
 
 def _keyx_bytes(secure: bool) -> int:
@@ -82,17 +88,38 @@ def _keyx_bytes(secure: bool) -> int:
     return KEYX_GROUP_BYTES
 
 
+def _check_tree_plan(tree_fanout: Optional[int], merge: str,
+                     compress: Optional[str]) -> None:
+    if tree_fanout is None:
+        return
+    if merge not in ("sum", "avg"):
+        raise ValueError(
+            "tree aggregation needs an additively homomorphic merge "
+            f"(sum/avg); got merge={merge!r} — max/mul/concat have no "
+            "partial-sum regrouping to plan")
+    if compress is not None:
+        raise ValueError(
+            "tree aggregation cannot compose with cut compression: codec "
+            "frames cannot be partial-summed — plan one or the other")
+    if tree_fanout < 2:
+        raise ValueError(f"tree_fanout must be >= 2, got {tree_fanout}")
+
+
 def plan_step(cfg: MLPSplitConfig, batch_size: int, microbatches: int = 1,
               *, bytes_per_elt: int = 4, secure: bool = False,
               compress: Optional[str] = None,
-              topk_fraction: float = 0.25) -> StepPlan:
+              topk_fraction: float = 0.25,
+              tree_fanout: Optional[int] = None) -> StepPlan:
     """Build a :class:`StepPlan` from the paper-MLP config using the same
     analytic FLOP model as repro.core.costs (Tables 5 & 6).  ``compress``
     prices the cut uplinks AND jacobian downlinks (both clock
-    ``plan.cut_bytes``) at the codec's wire frame via ``costs.wire_bytes``."""
+    ``plan.cut_bytes``) at the codec's wire frame via ``costs.wire_bytes``.
+    ``tree_fanout`` plans a fanout-F aggregation tree (additive merges
+    only; mirrors the Executor's constructor rejections)."""
     if secure and compress is not None:
         raise ValueError("secure aggregation and cut compression cannot "
                          "compose; plan one or the other")
+    _check_tree_plan(tree_fanout, cfg.merge, compress)
     if batch_size % microbatches:
         raise ValueError(f"batch {batch_size} not divisible by M={microbatches}")
     mb = batch_size // microbatches
@@ -118,6 +145,7 @@ def plan_step(cfg: MLPSplitConfig, batch_size: int, microbatches: int = 1,
         bytes_per_elt=bytes_per_elt,
         keyx_bytes=_keyx_bytes(secure),
         compress=compress,
+        tree_fanout=tree_fanout,
     )
 
 
@@ -128,7 +156,8 @@ def plan_from_arch(cfg, batch_size: int, seq_len: int, microbatches: int = 1,
                    *, bytes_per_elt: int = 4,
                    secure: Optional[bool] = None,
                    compress=_FROM_CFG,
-                   topk_fraction: Optional[float] = None) -> StepPlan:
+                   topk_fraction: Optional[float] = None,
+                   tree_fanout: Optional[int] = None) -> StepPlan:
     """StepPlan for a vertically-split LM arch (repro.configs.base.ArchConfig).
 
     Towers are ``tower_layers`` transformer blocks at width d_model/K; the
@@ -153,6 +182,7 @@ def plan_from_arch(cfg, batch_size: int, seq_len: int, microbatches: int = 1,
     if secure and compress is not None:
         raise ValueError("secure aggregation and cut compression cannot "
                          "compose; plan one or the other")
+    _check_tree_plan(tree_fanout, v.merge, compress)
     if batch_size % microbatches:
         raise ValueError(f"batch {batch_size} not divisible by M={microbatches}")
     K = v.num_clients
@@ -182,6 +212,7 @@ def plan_from_arch(cfg, batch_size: int, seq_len: int, microbatches: int = 1,
         bytes_per_elt=bytes_per_elt,
         keyx_bytes=_keyx_bytes(secure),
         compress=compress,
+        tree_fanout=tree_fanout,
     )
 
 
@@ -245,8 +276,22 @@ def simulate_serial(plan: StepPlan, link: LinkModel, *,
     once per message, not once per microbatch).  Steps never overlap, so
     ``steps`` just scales the makespan — except the secure-aggregation key
     exchange (``plan.keyx_bytes`` > 0), a ONE-TIME setup round paid before
-    step 0 and amortized into ``step_time_s`` over ``steps``."""
+    step 0 and amortized into ``step_time_s`` over ``steps``.
+
+    A ``plan.tree_fanout`` adds the tree's terms — relay receive hops and
+    partial-sum adds on the way up, relay forward hops on the way down —
+    while role 0's NIC (``link.server_bandwidth_bps``) serializes only the
+    ``min(F, K)`` top-level frames.  Everything is sequential here, so the
+    serial clock shows NO tree win (strictly more hops): the win is the
+    reduced role-0 serialization, which only the pipelined clock can see.
+    """
     M, K = plan.microbatches, plan.num_clients
+    tree = None
+    if plan.tree_fanout:
+        from repro.runtime.topology import AggTree
+
+        tree = AggTree(K, plan.tree_fanout)
+    n_top = len(tree.top_level) if tree is not None else K
     setup = 0.0
     if plan.keyx_bytes:
         # serial key exchange: role 0 gathers every public value, then
@@ -260,11 +305,31 @@ def simulate_serial(plan: StepPlan, link: LinkModel, *,
         t += link.client_compute_s(k, plan.tower_fwd_flops[k] * M)
     for k in range(K):
         t += link.transfer_s(k, plan.cut_bytes * M)
+    if tree is not None:
+        for k in range(K):
+            p = tree.parent(k)
+            if p is not None:
+                # child frame crosses the relay's downlink too, and the
+                # relay pays one add per child element before uplinking
+                t += link.transfer_s(p, plan.cut_bytes * M)
+        for r in tree.relays:
+            t += link.client_compute_s(
+                r, len(tree.children(r)) * plan.cut_elements * M)
+    t += link.server_transfer_s(n_top * plan.cut_bytes * M)  # role-0 NIC rx
     t += link.server_compute_s(plan.server_flops * M)
     t += 2 * link.transfer_s(plan.label_holder, plan.head_bytes * M)
+    t += link.server_transfer_s(n_top * plan.cut_bytes * M)  # role-0 NIC tx
     for k in range(K):
         t += link.transfer_s(k, plan.cut_bytes * M)
         t += link.client_compute_s(k, plan.tower_bwd_flops[k] * M)
+    if tree is not None:
+        # jacobian fan-down: a relay forwards the shared jacobian to each
+        # child over its own uplink (the child's downlink is already paid
+        # in the per-client loop above)
+        for k in range(K):
+            p = tree.parent(k)
+            if p is not None:
+                t += link.transfer_s(p, plan.cut_bytes * M)
     report = _report_skeleton(plan, "serial", steps)
     report.total_time_s = t * steps + setup
     report.step_time_s = report.total_time_s / steps
@@ -289,11 +354,32 @@ def simulate_pipelined(
     driver submits step s only once step s-W has fully collected, so at
     W=1 consecutive steps barrier exactly like ``Executor.run_step`` while
     at W>1 step t+1's tower forwards run against step t's server
-    compute/jacobian drain.  Driver ordering is modeled faithfully: a
-    client streams all of step t+1's forwards before step t's tower
-    backwards (the FIFO worker queue), and the role-0 server merges step
-    t+1 microbatches only after step t's ``step_done`` barrier (client
-    tower backwards + an ack latency).
+    compute/jacobian drain.  Driver ordering is modeled faithfully,
+    including the client FIFO: ``submit_step`` ships ALL M of a step's
+    forwards upfront, so every released forward is already queued on the
+    client CPU before any same-window backward arrives — the simulator
+    acquires all M forward slots at release time (``Resource`` grants in
+    acquire-call order) rather than chaining microbatch m+1 at the end of
+    m, so a step-t backward correctly queues BEHIND step-t+1's
+    already-submitted forwards instead of slotting between them.  The
+    role-0 server merges step t+1 microbatches only after step t's
+    ``step_done`` barrier (client tower backwards + an ack latency), and
+    every cut-class frame role 0 receives/sends additionally serializes on
+    its NIC at ``link.server_bandwidth_bps`` (infinite by default — zero
+    width, pre-existing predictions unchanged).
+
+    A ``plan.tree_fanout`` clocks the fanout-F aggregation tree: each
+    client's forward feeds its subtree's partial-sum accumulator; a relay
+    merges once its own cut and every child's combined frame landed
+    (child hop = child uplink -> relay downlink; the adds run on the
+    relay's CPU, contending with its forwards/backwards) and uplinks ONE
+    frame; role 0 barriers on the ``min(F, K)`` top-level frames and fans
+    ONE jacobian per top-level client back, which relays forward to their
+    children after their own tower backward.  Role 0's NIC and merge path
+    see O(F) frames per microbatch — the crossover against the star's
+    O(K) is exactly what the K-sweep benchmark asks this clock to
+    predict.  Barrier-only (``mode="nowait"`` rejects a tree: a client
+    folded into a partial sum cannot be dropped after the fact).
 
     No-wait deadlines: an explicit ``deadline_s`` is a static per-microbatch
     window (the pre-adaptive behavior); otherwise an
@@ -315,17 +401,32 @@ def simulate_pipelined(
     if steps < 1 or cross_step < 1:
         raise ValueError(f"steps/cross_step must be >= 1, got "
                          f"{steps}/{cross_step}")
+    tree = None
+    if plan.tree_fanout:
+        if mode != "pipelined":
+            raise ValueError(
+                "tree aggregation is barrier-only: a client folded into a "
+                "relay's partial sum cannot be dropped at a no-wait "
+                "deadline")
+        from repro.runtime.topology import AggTree
+
+        tree = AggTree(plan.num_clients, plan.tree_fanout)
     if mode == "nowait" and deadline_s is None and deadline is None:
         deadline = AdaptiveDeadline(
             plan.num_clients, initial_s=default_deadline_s(plan, link))
 
     S, W = steps, min(cross_step, steps)
     M, K = plan.microbatches, plan.num_clients
+    n_top = len(tree.top_level) if tree is not None else K
     clock = EventClock()
     client_cpu = [Resource(f"client{k}/cpu") for k in range(K)]
     uplink = [Resource(f"client{k}/up") for k in range(K)]
     downlink = [Resource(f"client{k}/down") for k in range(K)]
     server = Resource("server")
+    # role-0 NIC: every cut-class frame role 0 receives/sends serializes
+    # here (zero-width at the default infinite server_bandwidth_bps)
+    server_rx = Resource("server/rx")
+    server_tx = Resource("server/tx")
 
     arrived: dict[tuple[int, int], dict[int, float]] = {}
     first_arrival: dict[tuple[int, int], float] = {}
@@ -333,10 +434,6 @@ def simulate_pipelined(
     report = _report_skeleton(plan, mode, S, cross_step)
     done_t = [0.0]
 
-    # driver window state: step s's forwards are submitted (released) once
-    # step s-W has collected; the first W steps fill the pipeline at t=0
-    released = [s < W for s in range(S)]
-    fwd_waiting: dict[int, list[int]] = {}  # step -> clients ready for it
     server_waiting: dict[int, list[int]] = {}  # step -> mbs gated on collect
     collected = [False] * S
     server_done_count = [0] * S
@@ -349,23 +446,65 @@ def simulate_pipelined(
     def finish_at(t: float) -> None:
         done_t[0] = max(done_t[0], t)
 
-    def client_fwd(k: int, s: int, m: int) -> None:
-        _, end = client_cpu[k].acquire(clock.now, link.client_compute_s(
-            k, plan.tower_fwd_flops[k]))
-        clock.post(end, lambda: send_cut(k, s, m))
-        if m + 1 < M:  # stream the next microbatch immediately
-            clock.post(end, lambda: client_fwd(k, s, m + 1))
-        elif s + 1 < S:
-            # next step's forwards sit at the head of the FIFO queue the
-            # moment the driver submits them
-            if released[s + 1]:
-                clock.post(end, lambda: client_fwd(k, s + 1, 0))
-            else:
-                fwd_waiting.setdefault(s + 1, []).append(k)
+    def submit_forwards(k: int, s: int) -> None:
+        # the driver ships all M of a step's forwards at submit time, so
+        # the client FIFO already holds them before any backward arrives —
+        # acquire every slot now (Resource grants in acquire-call order)
+        for m in range(M):
+            _, end = client_cpu[k].acquire(clock.now, link.client_compute_s(
+                k, plan.tower_fwd_flops[k]))
+            clock.post(end, lambda m=m: fwd_done(k, s, m))
+
+    def fwd_done(k: int, s: int, m: int) -> None:
+        if tree is None:
+            send_cut(k, s, m)
+        else:
+            part_ready(k, s, m)
 
     def send_cut(k: int, s: int, m: int) -> None:
         _, end = uplink[k].acquire(clock.now, link.transfer_s(k, plan.cut_bytes))
+        clock.post(end, lambda: rx_root(k, s, m))
+
+    def rx_root(k: int, s: int, m: int) -> None:
+        _, end = server_rx.acquire(
+            clock.now, link.server_transfer_s(plan.cut_bytes))
         clock.post(end, lambda: arrive_cut(k, s, m))
+
+    # -- tree fan-in: partial sums climb toward role 0 ------------------------
+    if tree is not None:
+        need = {k: 1 + len(tree.children(k)) for k in range(K)}
+        parts: dict[tuple[int, int, int], int] = {}
+
+        def part_ready(k: int, s: int, m: int) -> None:
+            key = (k, s, m)
+            parts[key] = parts.get(key, 0) + 1
+            if parts[key] < need[k]:
+                return
+            del parts[key]
+            kids = tree.children(k)
+            if kids:
+                # the relay's partial-sum adds run on its own CPU,
+                # contending with its queued forwards/backwards
+                _, end = client_cpu[k].acquire(
+                    clock.now,
+                    link.client_compute_s(k, len(kids) * plan.cut_elements))
+                clock.post(end, lambda: send_up(k, s, m))
+            else:
+                send_up(k, s, m)
+
+        def send_up(k: int, s: int, m: int) -> None:
+            _, end = uplink[k].acquire(
+                clock.now, link.transfer_s(k, plan.cut_bytes))
+            p = tree.parent(k)
+            if p is None:
+                clock.post(end, lambda: rx_root(k, s, m))
+            else:
+                clock.post(end, lambda: relay_rx(p, s, m))
+
+        def relay_rx(p: int, s: int, m: int) -> None:
+            _, end = downlink[p].acquire(
+                clock.now, link.transfer_s(p, plan.cut_bytes))
+            clock.post(end, lambda: part_ready(p, s, m))
 
     def arrive_cut(k: int, s: int, m: int) -> None:
         key = (s, m)
@@ -378,7 +517,7 @@ def simulate_pipelined(
         if key in started:  # missed the no-wait deadline: discarded at role 0
             return
         arrived.setdefault(key, {})[k] = clock.now
-        if len(arrived[key]) == K:
+        if len(arrived[key]) == n_top:
             ready_server(s, m)
         elif mode == "nowait" and len(arrived[key]) == 1:
             window = deadline_s if deadline is None else deadline.deadline_s()
@@ -403,11 +542,12 @@ def simulate_pipelined(
 
     def start_server(s: int, m: int) -> None:
         started.add((s, m))
-        for k in range(K):
-            if k not in arrived.get((s, m), {}):
-                report.live[s * M + m][k] = 0.0
-                report.misses_per_client[k] += 1
-                note_bwd_skip(s, k)
+        if tree is None:  # tree mode is barrier-only: everyone made it
+            for k in range(K):
+                if k not in arrived.get((s, m), {}):
+                    report.live[s * M + m][k] = 0.0
+                    report.misses_per_client[k] += 1
+                    note_bwd_skip(s, k)
         # merge + server forward (1/3 of the server flops; bwd is the other 2/3)
         _, end = server.acquire(clock.now, link.server_compute_s(plan.server_flops / 3))
         clock.post(end, lambda: head_exchange(s, m))
@@ -434,9 +574,15 @@ def simulate_pipelined(
         clock.post(end, lambda: server_done(s, m))
 
     def server_done(s: int, m: int) -> None:
-        for k in range(K):
-            if report.live[s * M + m][k] > 0:
-                clock.post(clock.now, lambda k=k: send_jac(k, s, m))
+        if tree is not None:
+            # ONE jacobian per top-level client; relays fan it down after
+            # their own backward
+            for t in tree.top_level:
+                clock.post(clock.now, lambda t=t: send_jac(t, s, m))
+        else:
+            for k in range(K):
+                if report.live[s * M + m][k] > 0:
+                    clock.post(clock.now, lambda k=k: send_jac(k, s, m))
         server_done_count[s] += 1
         if server_done_count[s] == M:
             # the driver submits finish_step to every client right after
@@ -446,6 +592,12 @@ def simulate_pipelined(
                 maybe_step_done(s, k)
 
     def send_jac(k: int, s: int, m: int) -> None:
+        # role-0 NIC first, then the client's own downlink
+        _, end = server_tx.acquire(
+            clock.now, link.server_transfer_s(plan.cut_bytes))
+        clock.post(end, lambda: jac_downlink(k, s, m))
+
+    def jac_downlink(k: int, s: int, m: int) -> None:
         _, end = downlink[k].acquire(clock.now, link.transfer_s(k, plan.cut_bytes))
         clock.post(end, lambda: client_bwd(k, s, m))
 
@@ -454,6 +606,22 @@ def simulate_pipelined(
             k, plan.tower_bwd_flops[k]))
         finish_at(end)
         clock.post(end, lambda: bwd_complete(s, k))
+        if tree is not None and tree.children(k):
+            # relay jacobian fan-down: after its own backward, the relay
+            # forwards the SAME jacobian to each child over its uplink,
+            # into the child's downlink
+            def fan(c: int) -> None:
+                _, e_up = uplink[k].acquire(
+                    clock.now, link.transfer_s(k, plan.cut_bytes))
+                clock.post(e_up, lambda: child_rx(c))
+
+            def child_rx(c: int) -> None:
+                _, e_dn = downlink[c].acquire(
+                    clock.now, link.transfer_s(c, plan.cut_bytes))
+                clock.post(e_dn, lambda: client_bwd(c, s, m))
+
+            for c in tree.children(k):
+                clock.post(end, lambda c=c: fan(c))
 
     def bwd_complete(s: int, k: int) -> None:
         bwd_pending[s][k] -= 1
@@ -480,12 +648,11 @@ def simulate_pipelined(
         # the driver proceeds: merge any queued step-s+1 microbatches ...
         for m in server_waiting.pop(s + 1, []):
             start_server(s + 1, m)
-        # ... and submits step s+W, releasing its client forwards
+        # ... and submits step s+W, enqueueing its client forwards
         nxt = s + W
         if nxt < S:
-            released[nxt] = True
-            for k in fwd_waiting.pop(nxt, []):
-                clock.post(clock.now, lambda k=k: client_fwd(k, nxt, 0))
+            for k in range(K):
+                submit_forwards(k, nxt)
 
     if plan.keyx_bytes:
         # one-time key-agreement setup round gates the step-0 forwards
@@ -505,13 +672,22 @@ def simulate_pipelined(
         def keyx_down(j: int) -> None:
             _, end = downlink[j].acquire(
                 clock.now, link.transfer_s(j, K * plan.keyx_bytes))
-            clock.post(end, lambda: client_fwd(j, 0, 0))
+            clock.post(end, lambda: keyx_release(j))
+
+        def keyx_release(j: int) -> None:
+            # the driver's first W submits were queued behind the key
+            # exchange; the client drains them FIFO once its directory lands
+            for s in range(W):
+                submit_forwards(j, s)
 
         for k in range(K):
             clock.post(0.0, lambda k=k: keyx_up(k))
     else:
-        for k in range(K):
-            clock.post(0.0, lambda k=k: client_fwd(k, 0, 0))
+        # pipeline fill: the driver submits steps 0..W-1 back-to-back
+        # before collecting step 0
+        for s in range(W):
+            for k in range(K):
+                submit_forwards(k, s)
     clock.run()
 
     report.total_time_s = done_t[0]

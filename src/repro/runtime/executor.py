@@ -63,6 +63,7 @@ from repro.core.merge import collective_bytes_per_merge
 from repro.core.protocol import Ledger, step_schedule
 from repro.core.secure_agg import KEYX_GROUP_BYTES
 from repro.runtime.deadline import AdaptiveDeadline
+from repro.transport.tree import TreeRouter
 
 DROP_POLICIES = ("neutral", "fused", "impute")
 
@@ -200,6 +201,28 @@ class Executor:
     quantized/sparsified values — the modular-mask gap Secure Forward
     Aggregation addresses) and a program ``merge_fn`` (non-uniform cuts
     have no single per-vector wire frame to audit).
+
+    Tree aggregation (``agg_tree`` = :class:`~repro.runtime.topology.
+    AggTree`): the transport is wrapped in a
+    :class:`~repro.transport.tree.TreeRouter` (exposed as
+    ``self.transport`` — callers who ``close()`` should close THAT) and
+    the schedule re-routes per the tree — relay workers partial-sum their
+    subtree's cut uplinks, so :meth:`collect_step` gathers only the
+    ``min(F, K)`` top-level combined frames per microbatch, merges them
+    with one final sum (avg divides the full-tree sum by K), and fans each
+    top-level client ONE jacobian that the relays forward down unchanged.
+    ``setup_tree`` ships the one-time ``configure_relay`` round (run
+    automatically on the first ``submit_step``).  Role 0's per-step submit
+    and merge work drops from O(K) to O(F); the Ledger still audits the
+    exact LOGICAL per-edge schedule (``tree_cut[l]``/``tree_jac[l]`` tags:
+    one uniform frame per tree edge per microbatch per direction).
+    Composes with ``secure_agg`` — partial sums of masked cuts stay
+    blinded at relays and the pairwise masks cancel in role 0's full-tree
+    sum.  Unsupported combinations raise HERE, loudly: non-additive merges
+    (max/mul/concat have no partial-sum regrouping), a program
+    ``merge_fn``, compression (codec frames cannot be partial-summed), and
+    any non-barrier execution (a dropped client inside a combined frame
+    cannot be masked out after the fact).
     """
 
     def __init__(self, transport, server_fwd: Callable, loss_fn: Callable,
@@ -209,7 +232,8 @@ class Executor:
                  server_takes_batch: bool = False, server_aux: bool = False,
                  merge_fn: Optional[Callable] = None,
                  secure_agg: bool = False, secure_scale: float = 1.0,
-                 compress: Optional[str] = None, topk_fraction: float = 0.25):
+                 compress: Optional[str] = None, topk_fraction: float = 0.25,
+                 agg_tree=None):
         if mode not in ("serial", "pipelined", "nowait"):
             raise ValueError(f"mode must be serial|pipelined|nowait, got {mode!r}")
         if drop_policy is None:
@@ -258,6 +282,40 @@ class Executor:
                     "(non-uniform cuts, e.g. the vlm sequence concat): the "
                     "wire contract audits one k-per-vector frame per uplink, "
                     "which a non-uniform concatenation does not have")
+        if agg_tree is not None:
+            if merge not in ("sum", "avg"):
+                raise ValueError(
+                    "tree aggregation needs an additively homomorphic merge "
+                    "(sum/avg) — relays forward SUBTREE PARTIAL SUMS, and "
+                    f"max/mul/concat have no partial-sum regrouping; got "
+                    f"merge={merge!r}")
+            if merge_fn is not None:
+                raise ValueError(
+                    "tree aggregation cannot run a program merge_fn "
+                    "(non-uniform cuts, e.g. the vlm sequence concat): "
+                    "relays partial-sum uniform cut tensors, and a "
+                    "concatenation has no subtree partial sum")
+            if compress is not None:
+                raise ValueError(
+                    "tree aggregation cannot compose with cut compression: "
+                    "relays partial-sum cut tensors and codec frames "
+                    "(topk bitmaps / int8 codes) cannot be partial-summed — "
+                    "run one or the other")
+            if mode == "nowait" or drop_policy != "fused":
+                raise ValueError(
+                    "tree aggregation requires barrier execution "
+                    "(drop_policy='fused'): a client missing from a relay's "
+                    "combined frame cannot be masked out of the partial sum "
+                    "after the fact (got mode="
+                    f"{mode!r}, drop_policy={drop_policy!r})")
+            if agg_tree.num_clients != transport.num_clients:
+                raise ValueError(
+                    f"tree covers {agg_tree.num_clients} clients, transport "
+                    f"has {transport.num_clients}")
+            if not isinstance(transport, TreeRouter):
+                transport = TreeRouter(transport, agg_tree)
+        self.agg_tree = agg_tree
+        self._tree_ready = agg_tree is None or not agg_tree.relays
         self.transport = transport
         self.server_fwd = server_fwd
         self.loss_fn = loss_fn
@@ -294,7 +352,8 @@ class Executor:
             self.deadline = None
             self.static_deadline_s = float(deadline)
         self._schedule = step_schedule(transport.num_clients, label_holder,
-                                       secure=secure_agg, compress=compress)
+                                       secure=secure_agg, compress=compress,
+                                       tree=agg_tree)
         self._inflight: dict[int, _InflightStep] = {}  # insertion-ordered
         self._retired_first_t: dict[tuple[int, int], float] = {}
 
@@ -359,6 +418,42 @@ class Executor:
         self._secure_ready = True
         return self.keyx_ledger
 
+    # -- tree setup (one-time relay configuration round) ----------------------
+
+    def setup_tree(self, *, timeout_s: float = 120.0) -> None:
+        """Ship each relay its child id list (one-time ``configure_relay``)
+        and barrier on every ``relay_ready`` ack.  Idempotent; runs
+        automatically on the first :meth:`submit_step`.  Star-degenerate
+        trees (no relays) are a no-op."""
+        if self.agg_tree is None:
+            raise RuntimeError("setup_tree on a non-tree Executor "
+                               "(construct with agg_tree=AggTree(...))")
+        if self._tree_ready:
+            return
+        if self._inflight:
+            raise RuntimeError("relay configuration must precede the first "
+                               "step")
+        relays = self.agg_tree.relays
+        for r in relays:
+            self.transport.submit(r, {
+                "op": "configure_relay",
+                "children": list(self.agg_tree.children(r)),
+            })
+        ready = 0
+        while ready < len(relays):
+            got = self.transport.next_response(timeout_s)
+            if got is None:
+                raise RuntimeError("transport idle during relay "
+                                   f"configuration ({ready}/{len(relays)} "
+                                   "acks in)")
+            k, resp = got
+            if resp["op"] != "relay_ready":
+                raise RuntimeError(
+                    f"unexpected {resp['op']!r} from client {k} during relay "
+                    "configuration")
+            ready += 1
+        self._tree_ready = True
+
     # -- step halves ----------------------------------------------------------
 
     @property
@@ -381,6 +476,8 @@ class Executor:
         transport, K, M = self.transport, self.transport.num_clients, self.microbatches
         if step in self._inflight:
             raise ValueError(f"step {step} already in flight")
+        if not self._tree_ready:
+            self.setup_tree()
         if self.secure_agg:
             if not self._secure_ready:
                 self.setup_secure()
@@ -434,6 +531,12 @@ class Executor:
         if not self._inflight:
             raise RuntimeError("no in-flight step to collect "
                                "(call submit_step first)")
+        if self.agg_tree is not None and (liveness is not None
+                                          or merge_mask is not None):
+            raise ValueError(
+                "tree aggregation is barrier-only: per-client liveness / "
+                "merge_mask cannot be applied to a relay's combined frame "
+                "(the partial sum already folded every subtree member in)")
         st = next(iter(self._inflight.values()))
         transport, K, M = self.transport, self.transport.num_clients, self.microbatches
         schedule = self._schedule
@@ -458,7 +561,12 @@ class Executor:
             st.merged.add(m)
 
             arrived = st.cuts.pop(m, {})
-            if self.merge_fn is not None:
+            if self.agg_tree is not None:
+                # keys are the top-level clients; each frame is its whole
+                # subtree's partial sum
+                cuts_in = jnp.stack([arrived[t]
+                                     for t in self.agg_tree.top_level])
+            elif self.merge_fn is not None:
                 # non-uniform program merge (e.g. vlm sequence concat):
                 # cuts differ in shape per client, so there is no stack to
                 # zero-fill — barrier modes guarantee every cut arrived
@@ -484,7 +592,14 @@ class Executor:
             live_vec = jnp.asarray(live_row, jnp.float32)
 
             def server_loss(server_p, cuts):
-                if self.merge_fn is not None:
+                if self.agg_tree is not None:
+                    # final merge over the top-level partial sums; avg is
+                    # the full-tree sum over K (NOT over len(top_level))
+                    new_ema = ema_state
+                    merged = fast_merge(cuts, "sum")
+                    if self.merge == "avg":
+                        merged = merged / K
+                elif self.merge_fn is not None:
                     new_ema = ema_state
                     mask = merge_mask if self.drop_policy == "neutral" else None
                     merged = self.merge_fn(cuts, mask)
@@ -520,6 +635,25 @@ class Executor:
                 aux_acc.append(aux_m)
             st.ledger.record_spec(schedule.head_jac, logits)
 
+            if self.agg_tree is not None:
+                # ONE backward per top-level client; relays forward the same
+                # jacobian down the tree (the additive merges give every
+                # subtree member the identical cut gradient — avg's 1/K is
+                # already inside cut_grads).  The ledger records every
+                # logical tree edge, and sent_jacs counts the backward each
+                # member receives via the router fan-out.
+                for i, t in enumerate(self.agg_tree.top_level):
+                    jac_out = cut_grads[i]
+                    for member in self.agg_tree.subtree(t):
+                        st.ledger.record_spec(schedule.jacs[member], jac_out)
+                        st.sent_jacs[member] += 1
+                    transport.submit(t, {
+                        "op": "backward", "step": st.step, "mb": m,
+                        "jac": jac_out,
+                    })
+                losses.append(loss_m)
+                server_grad_acc.append(sg)
+                continue
             for spec in schedule.jacs:
                 k = spec.client
                 # serial/neutral semantics: jacobians flow to every client;
@@ -637,7 +771,15 @@ class Executor:
             # genuinely late arrivals (mb already merged) observe their raw
             # spread — that is how a recovered straggler earns its way back
             self.deadline.observe(k, spread)
-        if self.compress is not None:
+        if self.agg_tree is not None:
+            # the arriving frame is a top-level client's combined subtree
+            # partial sum; every edge under it carried exactly one frame of
+            # the same uniform shape, so the logical per-edge schedule is
+            # recorded exactly (tree_cut[l] tags)
+            for member in self.agg_tree.subtree(k):
+                st.ledger.record_spec(self._schedule.cuts[member],
+                                      resp["cut"])
+        elif self.compress is not None:
             # the payload is the worker's lossy encode; the ledger records
             # the codec's wire bytes (bitmap+values / int8 frame), not the
             # dense f32 carrier that crosses the loopback for convenience
@@ -666,6 +808,16 @@ class Executor:
 
         def have() -> int:
             return len(st.cuts.get(m, {}))
+
+        if self.agg_tree is not None:
+            # barrier on the min(F, K) top-level combined frames — this is
+            # the O(K) -> O(F) role-0 serialization win
+            need = len(self.agg_tree.top_level)
+            while have() < need:
+                if not self._pump(None):
+                    raise RuntimeError("transport idle with tree frames "
+                                       "outstanding")
+            return [1.0] * K, None
 
         if liveness is not None:
             # simulated clock: the transport delivers every cut; the given
@@ -737,6 +889,10 @@ class Executor:
             strategy = self.merge
             # the uplink tag is masked_cut[0] under secure aggregation
             cut_bytes = ledger.bytes_with_tag(self._schedule.cuts[0].tag)
+            if self.agg_tree is not None:
+                # tree_cut[0] is shared by every top-level edge: divide out
+                # for the same per-client per-step figure the star reports
+                cut_bytes //= len(self.agg_tree.top_level)
             itemsize = cuts.dtype.itemsize
         return ExecReport(
             mode=self.mode,

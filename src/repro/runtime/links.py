@@ -20,6 +20,12 @@ class LinkModel:
     bandwidth_bps: tuple[float, ...]  # per-client link bytes/second
     client_flops_per_s: tuple[float, ...]
     server_flops_per_s: float
+    # role-0 NIC serialization rate: every frame role 0 receives or sends
+    # ALSO pays num_bytes / server_bandwidth_bps on a shared server-side
+    # resource — the wire half of the O(K) star wall the aggregation tree
+    # exists to break.  inf (default) keeps the historical behavior where
+    # only the per-client links are clocked.
+    server_bandwidth_bps: float = float("inf")
 
     @property
     def num_clients(self) -> int:
@@ -34,12 +40,14 @@ class LinkModel:
         bandwidth_bps: float = 1e8,
         client_flops_per_s: float = 5e9,
         server_flops_per_s: float = 5e10,
+        server_bandwidth_bps: float = float("inf"),
     ) -> "LinkModel":
         return cls(
             latency_s=(latency_s,) * num_clients,
             bandwidth_bps=(bandwidth_bps,) * num_clients,
             client_flops_per_s=(client_flops_per_s,) * num_clients,
             server_flops_per_s=server_flops_per_s,
+            server_bandwidth_bps=server_bandwidth_bps,
         )
 
     def with_straggler(self, client: int, *, slowdown: float = 10.0) -> "LinkModel":
@@ -67,3 +75,10 @@ class LinkModel:
 
     def server_compute_s(self, flops: float) -> float:
         return flops / self.server_flops_per_s
+
+    def server_transfer_s(self, num_bytes: float) -> float:
+        """Role-0 NIC serialization for one frame (0.0 at the default
+        infinite rate — link latency is already paid on the client link)."""
+        if self.server_bandwidth_bps == float("inf"):
+            return 0.0
+        return num_bytes / self.server_bandwidth_bps

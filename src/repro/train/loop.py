@@ -133,7 +133,7 @@ def _make_transport(cfg: ArchConfig, transport: str, *, seed, batch, seq,
 
 def _verify_step0(res, program, tower_params, server_params, features, ctx,
                   microbatches, atol, print_fn, masked=False,
-                  compressed=False):
+                  compressed=False, tree=False):
     """The acceptance identity: the transport's step-0 gradients must match
     the serial ``protocol_step`` on the same program decomposition.
 
@@ -155,7 +155,15 @@ def _verify_step0(res, program, tower_params, server_params, features, ctx,
     compresses its cuts/jacobians exactly like the transport path with the
     zero error-feedback residual every stream starts from — the match (to
     ``compression.STEP0_VERIFY_ATOL``) proves the lossy wire carried the
-    step the codec defines, not silently degraded gradients."""
+    step the codec defines, not silently degraded gradients.
+
+    ``tree`` labels the aggregation-tree run: relays partial-summed their
+    subtree's cuts before role 0 ever saw a frame, so the K-term merge was
+    REASSOCIATED relative to the flat ``jnp.sum`` the serial reference
+    computes.  f32 addition is not associative — the match is to
+    ``runtime.topology.TREE_VERIFY_ATOL``, not bit-exact — but the relay
+    accumulation order is deterministic (own cut, then children by id), so
+    the residual is a fixed rounding difference, not nondeterminism."""
     M = microbatches
     B = jax.tree_util.tree_leaves(ctx)[0].shape[0]
     mbsz = B // M
@@ -180,7 +188,8 @@ def _verify_step0(res, program, tower_params, server_params, features, ctx,
     )
     loss_dev = abs(float(res.loss) - float(loss_ref))
     what = "masked-merge " if masked else \
-        "compressed-wire " if compressed else ""
+        "compressed-wire " if compressed else \
+        "tree-merge " if tree else ""
     if max_dev > atol or loss_dev > atol:
         raise RuntimeError(
             f"step-0 {what}gradients diverge from the serial protocol_step: "
@@ -207,6 +216,7 @@ def train_split(
     seed: int = 0,
     straggler: Optional[int] = None,
     straggler_delay_s: float = 0.25,
+    agg_tree_fanout: Optional[int] = None,
     verify_step0: bool = True,
     verify_atol: float = 1e-5,
     print_fn: Callable = print,
@@ -259,6 +269,17 @@ def train_split(
     at the documented ``compression.STEP0_VERIFY_ATOL``.  Compression and
     secure aggregation are rejected together before any worker spawns:
     additive masks do not cancel through quantized/sparsified values.
+
+    Hierarchical aggregation: ``agg_tree_fanout=F`` overlays a fanout-F
+    :class:`~repro.runtime.topology.AggTree` on the transport — relay
+    workers partial-sum their subtree's cut uplinks and role 0
+    merges/fans-out only ``min(F, K)`` frames per microbatch instead of K
+    (composes with secure aggregation: masked partial sums still cancel at
+    the root).  Requires an additive merge ("sum"/"avg"); rejected loudly
+    with compression, ``merge_fn`` programs, and no-wait mode before any
+    worker spawns.  Step 0 verifies to ``runtime.topology.
+    TREE_VERIFY_ATOL`` — the tree REASSOCIATES the f32 sum, so the match
+    is a documented rounding tolerance, not bit-exact.
     """
     from repro.models.split_program import get_program
     from repro.runtime.executor import Executor
@@ -300,6 +321,30 @@ def train_split(
                 "concat): role 0 must SUM masked cuts for the pairwise "
                 "masks to cancel.  Disable secure aggregation for this "
                 "family.")
+    agg_tree = None
+    if agg_tree_fanout is not None:
+        # fail actionably BEFORE spawning workers: every incompatibility
+        # below would otherwise surface as a mid-run Executor/worker error
+        from repro.runtime.topology import AggTree
+        if compress is not None:
+            raise ValueError(
+                "agg_tree_fanout cannot compose with cut compression: a "
+                "relay cannot partial-sum sparse/quantized frames without "
+                "decoding them, which breaks each stream's error-feedback "
+                "state.  Run one or the other.")
+        if program.merge_fn is not None or program.merge not in ("sum", "avg"):
+            raise ValueError(
+                f"agg_tree_fanout requires an additive merge: relays "
+                f"partial-sum subtree cuts, which is only the true merge "
+                f"for 'sum'/'avg', not {cfg.family!r}'s "
+                f"{'merge_fn' if program.merge_fn is not None else repr(program.merge)}.")
+        if runtime == "nowait":
+            raise ValueError(
+                "agg_tree_fanout cannot run in no-wait mode: a combined "
+                "tree frame has no per-client arrival to deadline or "
+                "EMA-impute.  Use --runtime serial/pipelined.")
+        agg_tree = AggTree(num_clients=cfg.vertical.num_clients,
+                           fanout=agg_tree_fanout)
     params = backbone.init_params(cfg, jax.random.PRNGKey(seed))
     tower_params, server_params = program.partition(params)
 
@@ -349,12 +394,17 @@ def train_split(
                     atol = max(verify_atol, 1e-3)
                 elif compress is not None:
                     atol = max(verify_atol, comp_lib.STEP0_VERIFY_ATOL)
+                elif agg_tree is not None:
+                    # relay partial sums reassociate the f32 K-term merge
+                    from repro.runtime.topology import TREE_VERIFY_ATOL
+                    atol = max(verify_atol, TREE_VERIFY_ATOL)
                 else:
                     atol = verify_atol
                 _verify_step0(res, program, tower_params, server_params,
                               program.features(b0), ctx0, M, atol,
                               print_fn, masked=secure,
-                              compressed=compress is not None)
+                              compressed=compress is not None,
+                              tree=agg_tree is not None)
                 if compress is not None:
                     comp_bytes = res.ledger.bytes_with_tag(
                         executor._schedule.cuts[0].tag)
@@ -397,7 +447,17 @@ def train_split(
                             program.merge, mode=mode, microbatches=M,
                             secure_agg=secure, compress=compress,
                             topk_fraction=cfg.vertical.topk_fraction,
+                            agg_tree=agg_tree,
                             **program.executor_kwargs)
+        # the Executor wraps a tree run's transport in a TreeRouter; rebind
+        # so the finally below closes the router (which stops its routing
+        # pump before tearing down the base transport)
+        tr = executor.transport
+        if agg_tree is not None:
+            print_fn(f"aggregation tree: fanout {agg_tree.fanout}, depth "
+                     f"{agg_tree.depth}, {len(agg_tree.relays)} relay(s) — "
+                     f"role 0 merges {len(agg_tree.top_level)} frames/mb "
+                     f"instead of {cfg.vertical.num_clients}")
         if secure:
             kx = executor.setup_secure()
             print_fn(f"secure aggregation: pairwise key exchange complete "

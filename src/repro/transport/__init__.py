@@ -46,8 +46,23 @@ Worker protocol (requests handled by :class:`TowerWorker`):
   then on every forward's cut uplink is masked at the source with fresh
   per-``(step, microbatch)`` round noise — role 0 relays public values but
   never holds a pair's seed, and never observes a raw cut activation)
+* ``configure_relay {children}``          -> ``relay_ready {}`` (one-time:
+  the worker becomes an aggregation-tree relay — its own forwards and the
+  children's ``aggregate`` frames are partial-summed per ``(step, mb)``
+  and ONE combined ``tree_cut`` frame is emitted once all parts landed;
+  refused when compressing)
+* ``aggregate {step, mb, child, frame}``  -> ``tree_cut {mb, cut}`` once
+  the subtree is complete for that ``(step, mb)``, else no response
+  (parts may arrive in any order across adjacent in-flight steps)
 * ``get_params {}``                       -> ``params {params}``
 * ``shutdown {}``                         -> ``bye {}``
+
+A relay's ``backward`` response additionally carries a ``relay_jac``
+directive (same jacobian, child id list); :class:`~repro.transport.tree.
+TreeRouter` — the overlay that routes cut frames up the
+:class:`~repro.runtime.topology.AggTree` and jacobians back down over any
+star-physical backend — turns it into one ``backward`` per child and
+delivers only the ``min(F, K)`` top-level combined frames to the executor.
 
 All per-step worker state is buffered BY STEP (param snapshot per step,
 per-step grad sums and pending features), so a cross-step driver
@@ -60,6 +75,7 @@ from repro.transport.builders import (build_lm_worker, build_mlp_worker,
                                       build_split_worker)
 from repro.transport.inproc import InprocTransport
 from repro.transport.multiproc import MultiprocTransport, WorkerSpec
+from repro.transport.tree import TreeRouter
 
 TRANSPORTS = ("sim", "inproc", "multiproc")
 
@@ -70,6 +86,7 @@ __all__ = [
     "SimTransport",
     "InprocTransport",
     "MultiprocTransport",
+    "TreeRouter",
     "WorkerSpec",
     "build_split_worker",
     "build_lm_worker",

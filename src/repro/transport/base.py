@@ -100,6 +100,28 @@ class TowerWorker:
     does not compose with secure aggregation (masks do not cancel through
     quantized values); the worker refuses key exchange when compressing,
     mirroring the Executor's constructor-time rejection.
+
+    Tree aggregation (``runtime.topology.AggTree``): a one-time
+    ``configure_relay`` op turns this worker into a RELAY — it learns its
+    child ids and, instead of uplinking its own cut, accumulates a partial
+    sum of its subtree: its own forward plus one ``aggregate`` frame per
+    child (each itself a subtree partial sum).  Parts are buffered per
+    (step, mb) and may arrive in ANY order across adjacent in-flight
+    steps; the accumulator returns ``None`` until all ``1 + len(children)``
+    parts landed, then sums them in a FIXED deterministic order (own cut
+    first, children in configured id order — run-to-run reproducible
+    despite f32 reassociation) and emits ONE combined ``tree_cut`` frame
+    for the router to forward upstream.  Masked cuts partial-sum the same
+    way (pairwise masks cancel only in the root's full sum — a relay's
+    partial sum stays blinded, which is the Secure Forward Aggregation
+    composition).  Jacobian fan-out rides the ``backward`` op: for the
+    additive merges every subtree member receives the SAME jacobian the
+    relay got (d merged / d partial = 1 for sum, 1/K pre-applied by role 0
+    for avg), so the relay's backward response carries a ``relay_jac``
+    directive the router turns into child backwards — no second jacobian
+    computation anywhere.  ``configure_relay`` refuses a compressing
+    worker (codec frames cannot be partial-summed), mirroring the
+    Executor's constructor-time tree+compress rejection.
     """
 
     def __init__(self, client_id: int, tower_fwd: Callable, tower_params, *,
@@ -128,6 +150,8 @@ class TowerWorker:
         self._ef_residual: dict = {}  # mb -> error-feedback residual carry
         self._dh_secret: Optional[int] = None  # ephemeral, key exchange only
         self._secure: Optional[dict] = None  # pair keys + round derivation
+        self._relay_children: tuple = ()  # child ids when acting as a relay
+        self._relay_parts: dict = {}  # (step, mb) -> {"self"|child_id: cut}
 
     # -- ops ----------------------------------------------------------------
 
@@ -141,6 +165,12 @@ class TowerWorker:
             return self._finish_step(request)
         if op == "key_exchange":
             return self._key_exchange(request)
+        if op == "configure_relay":
+            return self._configure_relay(request)
+        if op == "aggregate":
+            return self._relay_accumulate(
+                request["step"], request["mb"], request["child"],
+                jnp.asarray(request["frame"]))
         if op == "get_params":
             return {"op": "params", "client": self.client_id,
                     "params": self.params}
@@ -193,8 +223,40 @@ class TowerWorker:
             cut, self._ef_residual[mb] = comp_lib.compress_with_feedback(
                 cut, self._ef_residual.get(mb), self.compress,
                 self.topk_fraction)
+        if self._relay_children:
+            # relay: this cut is one part of the subtree partial sum; the
+            # combined frame is emitted once every child's frame landed too
+            return self._relay_accumulate(step, mb, "self", cut)
         return {"op": "cut", "client": self.client_id, "step": step,
                 "mb": mb, "cut": cut}
+
+    def _configure_relay(self, request: dict) -> dict:
+        if self.compress is not None:
+            raise ValueError(
+                f"client {self.client_id}: compression ({self.compress}) "
+                "cannot compose with tree aggregation — relays partial-sum "
+                "cut tensors and codec frames cannot be partial-summed")
+        self._relay_children = tuple(int(c) for c in request["children"])
+        return {"op": "relay_ready", "client": self.client_id}
+
+    def _relay_accumulate(self, step: int, mb: int, part_key,
+                          frame) -> Optional[dict]:
+        parts = self._relay_parts.setdefault((step, mb), {})
+        if part_key in parts:
+            raise ValueError(
+                f"client {self.client_id}: duplicate aggregation part "
+                f"{part_key!r} for (step {step}, mb {mb})")
+        parts[part_key] = frame
+        if len(parts) < 1 + len(self._relay_children):
+            return None  # subtree incomplete — parts arrive in any order
+        del self._relay_parts[(step, mb)]
+        # fixed accumulation order: own cut first, then children in
+        # configured id order — deterministic rounding run to run
+        total = parts["self"]
+        for child in self._relay_children:
+            total = total + parts[child]
+        return {"op": "tree_cut", "client": self.client_id, "step": step,
+                "mb": mb, "cut": total}
 
     def _key_exchange(self, request: dict) -> dict:
         if self.compress is not None:
@@ -252,9 +314,19 @@ class TowerWorker:
         if pending is not None and \
                 self._jacs_seen[step] >= pending.get("expected_jacs", 0):
             del self._pending_finish[step]
-            return self._complete_finish(pending)
-        return {"op": "grad", "client": self.client_id, "step": step,
-                "mb": mb}
+            resp = self._complete_finish(pending)
+        else:
+            resp = {"op": "grad", "client": self.client_id, "step": step,
+                    "mb": mb}
+        if self._relay_children:
+            # fan the SAME jacobian down the tree: for the additive merges
+            # every subtree member's cut gradient equals the relay's (role 0
+            # pre-applies the 1/K of avg), so the relay forwards its received
+            # jac verbatim — the router turns this directive into one
+            # backward per child
+            resp["relay_jac"] = {"step": step, "mb": mb, "jac": jac,
+                                 "children": list(self._relay_children)}
+        return resp
 
     def _finish_step(self, request: dict) -> Optional[dict]:
         step = request["step"]

@@ -295,6 +295,68 @@ def test_pipeline_w2_beats_w1_wallclock_and_sim_predicts_it():
     assert 0.6 < predicted / measured < 1.4, (predicted, measured)
 
 
+def test_pipeline_m2_w2_wallclock_band_matches_sim():
+    """Regression for the M>1 ∧ W>1 client-FIFO order: the driver ships all
+    M of a step's forwards at submit time, so at W=2 a client's queue holds
+    step t+1's TWO forwards before step t's backwards arrive.  The clock
+    acquires every forward slot at step-release time to model exactly that
+    order — pin its prediction band against a measured inproc run with
+    injected compute."""
+    import time as _time
+
+    cfg = TINY
+    fwd_delay, server_delay, S, M = 0.1, 0.1, 3, 2
+    params = split_model.init_split_mlp(jax.random.PRNGKey(0), cfg)
+    feats_by_step, y_by_step = _mlp_steps(cfg, S + 1)
+
+    def slow_loss(logits, labels):
+        _time.sleep(server_delay)  # per microbatch: role-0 merge+head work
+        return split_model.softmax_xent(logits, labels, cfg.num_classes)
+
+    def run(window):
+        workers = [TowerWorker(k, towers.mlp_tower_apply,
+                               params["towers"][k],
+                               forward_delay_s=fwd_delay)
+                   for k in range(cfg.num_clients)]
+        with InprocTransport(workers) as tr:
+            executor = Executor(tr, towers.mlp_tower_apply, slow_loss,
+                                cfg.merge, mode="pipelined", microbatches=M)
+            executor.run_step(params["server"], y_by_step[S],
+                              features=feats_by_step[S],
+                              collect_grads=False)
+            pipeline = StepPipeline(executor, window=window)
+            t0 = _time.time()
+            for s in range(S):
+                pipeline.push(params["server"], y_by_step[s], step=s + 1,
+                              features=feats_by_step[s],
+                              collect_grads=False)
+            pipeline.flush(params["server"], collect_grads=False)
+            return (_time.time() - t0) / S
+
+    t1, t2 = run(1), run(2)
+    measured = t1 / t2
+
+    plan = StepPlan(
+        num_clients=cfg.num_clients, microbatches=M,
+        tower_fwd_flops=(fwd_delay,) * cfg.num_clients,
+        tower_bwd_flops=(0.003,) * cfg.num_clients,
+        server_flops=server_delay, cut_bytes=4 * cfg.cut_dim * 4,
+        head_bytes=4 * cfg.num_classes * 4, merge=cfg.merge,
+        cut_elements=4 * cfg.cut_dim,
+    )
+    link = LinkModel.uniform(cfg.num_clients, latency_s=2e-4,
+                             bandwidth_bps=1e9, client_flops_per_s=1.0,
+                             server_flops_per_s=1.0)
+    sim = {w: simulate_pipelined(plan, link, steps=S,
+                                 cross_step=w).step_time_s for w in (1, 2)}
+    predicted = sim[1] / sim[2]
+    assert sim[2] < sim[1]
+    # the clock and the wall agree on the size of the win with microbatch
+    # queues in play (the pre-fix clock chained forwards per-mb and
+    # overpredicted the W=2 win here)
+    assert 0.6 < predicted / measured < 1.4, (predicted, measured)
+
+
 # ---------------------------------------------------------------------------
 # engine: the cross-step clock itself
 # ---------------------------------------------------------------------------
@@ -373,13 +435,19 @@ def test_advise_arch_split_depth_sweeps_tower_layers():
     # the default (fast-server) rates they disagree on the placement
     assert (serial["recommended_tower_layers"]
             != pipe["recommended_tower_layers"])
-    # the cross-step window can only help a placement, never meaningfully
-    # hurt it (the W=2 figure amortizes a pipeline fill + step_done ack
-    # latencies over a short multi-step run, so allow a ~1% wobble at
-    # placements the window cannot improve)
+    # the cross-step window helps every placement where overlap exists, but
+    # it is NOT free at placements it cannot improve: the driver ships step
+    # t+1's M forwards before step t's backwards, so on client-bound
+    # placements the backwards queue behind a full step of forwards and the
+    # short run's drain stretches.  The clock models that FIFO order
+    # exactly (at M=4 the microbatch pipeline already supplies most of the
+    # overlap) — bound the worst-case stretch instead of forbidding it, and
+    # require the best placement to stay competitive.
     for d in pipe["step_time_s_by_depth"]:
         assert (pipe_w2["step_time_s_by_depth"][d]
-                <= pipe["step_time_s_by_depth"][d] * 1.01)
+                <= pipe["step_time_s_by_depth"][d] * 1.15)
+    assert (min(pipe_w2["step_time_s_by_depth"].values())
+            <= min(pipe["step_time_s_by_depth"].values()) * 1.05)
 
     with pytest.raises(ValueError):
         advise_arch_split_depth(cfg, objective="heuristic", **kw)
