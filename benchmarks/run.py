@@ -520,6 +520,74 @@ def bench_tree_sweep(out: dict) -> None:
           f"K={crossover}")
 
 
+def bench_split_serve(out: dict) -> None:
+    """Split inference serving: continuous vs static batching on a
+    mixed-length request workload (reduced dense arch, InprocTransport,
+    K feature-holder threads).  Static batching drains the whole batch
+    before admitting the next request, so a short request's retired slot
+    idles while its batchmate finishes; continuous batching admits into
+    the freed slot mid-flight.  Rows carry measured tokens/s and the
+    Ledger-audited wire bytes per generated token — the perf claim the
+    serving layer exists for."""
+    import jax
+
+    from repro.configs.base import get_arch
+    from repro.models import backbone, split_program
+    from repro.serve import SplitLMServer
+    from repro.transport import InprocTransport, build_split_worker
+
+    cfg = get_arch("smollm-360m").reduced()
+    params = backbone.init_params(cfg, jax.random.PRNGKey(0))
+    _, server = split_program.get_program(cfg).partition(params)
+    K = cfg.vertical.num_clients
+
+    # mixed lengths: short requests retire early, so continuous batching
+    # has real slots to refill while static ones sit idle
+    lens = [6, 12, 5, 10, 7, 9]
+    new_toks = [14, 4, 12, 6, 10, 8]
+    cache_len = max(s + n for s, n in zip(lens, new_toks))
+    prompts = [jax.random.randint(jax.random.PRNGKey(i + 1), (s,), 0,
+                                  cfg.vocab_size)
+               for i, s in enumerate(lens)]
+
+    rows = []
+    per_mode = {}
+    for continuous in (False, True):
+        mode = "continuous" if continuous else "static"
+        workers = [build_split_worker(k, cfg=cfg, seed=0, batch=2, seq=16)
+                   for k in range(K)]
+        with InprocTransport(workers) as tr:
+            def run_once():
+                srv = SplitLMServer(tr, cfg, server, cache_len=cache_len,
+                                    max_batch=2, continuous=continuous)
+                for p, n in zip(prompts, new_toks):
+                    srv.submit(p, max_new_tokens=n)
+                t0 = time.time()
+                srv.run()
+                return srv, time.time() - t0
+
+            run_once()  # compile towers/slots; timing is the second pass
+            srv, dt = run_once()
+        wire = srv.wire_report()
+        tokens = srv.stats["tokens"]
+        per_mode[mode] = tokens / dt
+        rows.append({
+            "mode": mode, "clients": K, "max_batch": 2,
+            "requests": len(prompts), "tokens": tokens,
+            "decode_rounds": srv.stats["decode_rounds"],
+            "tokens_per_s": tokens / dt,
+            "wire_bytes_per_token": wire["bytes_per_token"],
+            "decode_wire_bytes_per_token": wire["decode_bytes_per_token"],
+        })
+        _emit(f"split_serve/{mode}", dt * 1e6,
+              f"{tokens / dt:.1f}tok/s "
+              f"{wire['bytes_per_token']:.0f}B/tok")
+    out["split_serve"] = rows
+    print(f"split_serve: continuous {per_mode['continuous']:.1f} tok/s vs "
+          f"static {per_mode['static']:.1f} tok/s "
+          f"({per_mode['continuous'] / per_mode['static']:.2f}x)")
+
+
 def run_paper_tables(steps: int, out: dict) -> None:
     from benchmarks import paper_tables as pt
 
@@ -542,7 +610,7 @@ def run_paper_tables(steps: int, out: dict) -> None:
 
 
 SECTIONS = ("kernels", "runtime", "transport", "split_exec",
-            "split_pipeline", "tree", "tables")
+            "split_pipeline", "tree", "split_serve", "tables")
 
 
 def main(argv=None) -> int:
@@ -586,6 +654,8 @@ def main(argv=None) -> int:
         bench_split_pipeline(out, full=args.full)
     if want("tree"):
         bench_tree_sweep(out)
+    if want("split_serve"):
+        bench_split_serve(out)
     steps = 400 if args.full else 60
     if want("tables"):
         run_paper_tables(steps, out)
@@ -609,8 +679,8 @@ def main(argv=None) -> int:
         print(to_markdown(rows))
 
     for name in ("runtime", "transport", "split_exec", "split_pipeline",
-                 "tree_sweep", "table2", "table3", "table4", "table5",
-                 "table6"):
+                 "tree_sweep", "split_serve", "table2", "table3", "table4",
+                 "table5", "table6"):
         if name in out:
             print(f"\n== {name} ==")
             for row in out[name]:
@@ -618,12 +688,13 @@ def main(argv=None) -> int:
                             for k, v in row.items()})
     if args.bench_json and any(k in out for k in
                                ("split_exec", "split_pipeline",
-                                "tree_sweep")):
+                                "tree_sweep", "split_serve")):
         # the machine-readable perf artifact CI uploads: wall-clock per
-        # family and per transport, serial (W=1) vs cross-step (W>1), plus
-        # the star-vs-tree aggregation K-sweep
+        # family and per transport, serial (W=1) vs cross-step (W>1), the
+        # star-vs-tree aggregation K-sweep, and serving throughput
+        # (continuous vs static batching, wire bytes per token)
         artifact = {k: out[k] for k in ("split_exec", "split_pipeline",
-                                        "tree_sweep")
+                                        "tree_sweep", "split_serve")
                     if k in out}
         json.dump(artifact, open(args.bench_json, "w"), indent=1,
                   default=str)

@@ -143,6 +143,54 @@ def aux_exchange_bytes(microbatches: int, itemsize: int = 4) -> int:
     return microbatches * itemsize
 
 
+def serve_prefill_bytes(prompt_len: int, cut_dim: int, num_clients: int,
+                        *, itemsize: int = 4, token_bytes: int = 4) -> dict:
+    """Byte model of ONE request's serving prefill round, cross-checked
+    against the serving driver's ``serve_prompt[k]`` / ``serve_prefill_cut[k]``
+    ledger tags in tests.
+
+    Role 0 ships the request's int32 prompt ids down to every feature
+    holder (the token stream is the shared context of the vertical token-LM
+    split, exactly as in training); each holder replies ONCE with its full
+    prompt-length f32 cut slice — the per-session activation role 0 merges,
+    caches, and decodes against.  A cut-cache eviction re-runs this round,
+    so total serving traffic is ``(requests + re-prefills)`` times this
+    model plus :func:`serve_decode_bytes` per generated-token round."""
+    prompt = prompt_len * token_bytes
+    cut = prompt_len * cut_dim * itemsize
+    return {
+        "prompt_bytes_per_client": prompt,
+        "cut_bytes_per_client": cut,
+        "role0_sent": num_clients * prompt,
+        "role0_received": num_clients * cut,
+        "total": num_clients * (prompt + cut),
+    }
+
+
+def serve_decode_bytes(cut_dim: int, num_clients: int, *, rounds: int = 1,
+                       itemsize: int = 4, token_bytes: int = 4) -> dict:
+    """Byte model of a request's serving DECODE-step frames, cross-checked
+    against the serving driver's ``serve_token[k]`` / ``serve_cut[k]``
+    ledger tags in tests.
+
+    Every decode round ships the last sampled token id (one int32) down to
+    each feature holder, which embeds it through its private embedding
+    columns, advances its tower KV cache one slot, and uplinks a single
+    (1, 1, cut_dim) f32 cut frame.  A request generating N tokens runs
+    N - 1 rounds (the first token samples from the prefill logits), so the
+    per-token wire cost of split decode is this model's ``total`` — the
+    number the ``split_serve`` benchmark tracks per token."""
+    token = token_bytes * rounds
+    cut = cut_dim * itemsize * rounds
+    return {
+        "token_bytes_per_client": token,
+        "cut_bytes_per_client": cut,
+        "role0_sent": num_clients * token,
+        "role0_received": num_clients * cut,
+        "total": num_clients * (token + cut),
+    }
+
+
 def _clock_placements(plans: dict, link, objective: str,
                       cross_step: int) -> tuple[dict, int]:
     """Shared sweep core of the two placement advisors: clock every

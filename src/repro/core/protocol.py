@@ -89,6 +89,7 @@ class MessageSpec:
     # "cut" | "masked_cut" | "compressed_cut" | "tree_cut" | "head_out"
     # | "aux" | "head_jac" | "jac" | "compressed_jac" | "tree_jac"
     # | "keyx_pub" | "keyx_bcast"
+    # | "serve_prompt" | "serve_prefill_cut" | "serve_token" | "serve_cut"
     kind: str
     client: Optional[int] = None
 
@@ -224,6 +225,68 @@ def step_schedule(num_clients: int, label_holder: int = 0, *,
         key_bcasts=key_bcasts,
         secure=secure,
         tree=tree,
+    )
+
+
+@dataclass(frozen=True)
+class ServeSchedule:
+    """THE serving message schedule — the inference-time sibling of
+    :class:`StepSchedule`, in four per-client message classes:
+
+    * ``prompts``       — role 0 -> client k: the request's int32 prompt
+      ids (tag ``serve_prompt[k]``).  The token stream is the shared
+      context of the vertical token-LM split, exactly as in training; a
+      client's PRIVATE dimension is its embedding-column slice, which
+      never leaves it.
+    * ``prefill_cuts``  — client k -> role 0: the one-time full-prompt cut
+      slice (tag ``serve_prefill_cut[k]``), merged at role 0 into the
+      per-session cut activation that is cached, evicted, and
+      admission-controlled by the serving driver.
+    * ``tokens``        — role 0 -> client k: the last sampled token id,
+      one int32 per decode round (tag ``serve_token[k]``).
+    * ``cuts``          — client k -> role 0: the one-token decode cut
+      frame (tag ``serve_cut[k]``).
+
+    Unlike training there is no jacobian leg — serving is forward-only —
+    and no masked/compressed/tree variants: serving frames are raw cut
+    tensors (the driver rejects secure/compressed/tree configs at
+    construction).  Every message is Ledger-recorded by the serving driver
+    and reconciled against ``costs.serve_prefill_bytes`` /
+    ``costs.serve_decode_bytes`` in tests, the same way training traffic
+    audits against its byte models."""
+
+    prompts: tuple[MessageSpec, ...]
+    prefill_cuts: tuple[MessageSpec, ...]
+    tokens: tuple[MessageSpec, ...]
+    cuts: tuple[MessageSpec, ...]
+
+
+def serve_schedule(num_clients: int, label_holder: int = 0) -> ServeSchedule:
+    """The serving schedule for ``num_clients`` feature holders.  Serving
+    has no label traffic, but the role naming stays consistent with
+    :func:`step_schedule` so one ledger can audit a process that both
+    trains and serves."""
+    return ServeSchedule(
+        prompts=tuple(
+            MessageSpec("role0", _role_of(k, label_holder),
+                        f"serve_prompt[{k}]", "serve_prompt", k)
+            for k in range(num_clients)
+        ),
+        prefill_cuts=tuple(
+            MessageSpec(_role_of(k, label_holder), "role0",
+                        f"serve_prefill_cut[{k}]", "serve_prefill_cut", k)
+            for k in range(num_clients)
+        ),
+        tokens=tuple(
+            MessageSpec("role0", _role_of(k, label_holder),
+                        f"serve_token[{k}]", "serve_token", k)
+            for k in range(num_clients)
+        ),
+        cuts=tuple(
+            MessageSpec(_role_of(k, label_holder), "role0",
+                        f"serve_cut[{k}]", "serve_cut", k)
+            for k in range(num_clients)
+        ),
     )
 
 

@@ -35,6 +35,44 @@ from repro.models import transformer as tfm
 from repro.models.transformer import BlockDims
 
 
+class TowerServeFns:
+    """Client-side serving bundle: per-request tower prefill/decode.
+
+    ``prefill(tower_params, tokens (1, S), cache_len) -> (cut (1, S, D),
+    session)`` runs the tower teacher-forced over the prompt and returns
+    the full-prompt cut slice plus the request's tower KV session state;
+    ``decode(tower_params, session, token (1,)) -> (cut (1, 1, D),
+    session)`` advances the session one token.  Sessions are opaque
+    pytrees owned by the :class:`~repro.transport.base.TowerWorker` — one
+    per in-flight request — so a client serves many interleaved requests
+    at heterogeneous positions."""
+
+    def __init__(self, prefill: Callable, decode: Callable):
+        self.prefill = prefill
+        self.decode = decode
+
+
+class ServerServeFns:
+    """Role-0 serving bundle: per-slot server prefill/decode from MERGED
+    cuts (the server never sees tokens beyond the ids it relays).
+
+    ``init_cache(cache_len)`` builds one empty B=1 decode-slot cache;
+    ``prefill(server_params, cache, merged (1, S, d)) -> (logits (1, V),
+    cache)`` fills it from a session's merged prefill cut;
+    ``decode(server_params, cache, merged (1, 1, d)) -> (logits (1, V),
+    cache)`` advances one token.  ``decode`` is written per-slot so the
+    serving driver can ``jax.vmap`` it over a stacked slot axis — each
+    slot carries its own ``index``, which is how one fixed-shape compiled
+    step decodes a continuous batch of requests at heterogeneous
+    positions."""
+
+    def __init__(self, init_cache: Callable, prefill: Callable,
+                 decode: Callable):
+        self.init_cache = init_cache
+        self.prefill = prefill
+        self.decode = decode
+
+
 class SplitProgram:
     """Family-agnostic contract; subclasses register one family each.
 
@@ -108,6 +146,24 @@ class SplitProgram:
         feature stream from the shared seed, so a spawned worker needs no
         tensors from the driver."""
         raise NotImplementedError
+
+    def tower_serve_fns(self, client: int) -> TowerServeFns:
+        """Client ``client``'s serving bundle (KV-cached prefill/decode).
+        Families without a serving decomposition raise."""
+        raise NotImplementedError(
+            f"{self.cfg.name}: split serving is not implemented for the "
+            f"{self.cfg.family!r} family — the dense token-LM program is "
+            "the serving exemplar (stateful tower decode for ssm/hybrid "
+            "towers is an open item)")
+
+    def server_serve_fns(self) -> ServerServeFns:
+        """Role-0 serving bundle (slot caches + prefill/decode from merged
+        cuts).  Families without a serving decomposition raise."""
+        raise NotImplementedError(
+            f"{self.cfg.name}: split serving is not implemented for the "
+            f"{self.cfg.family!r} family — the dense token-LM program is "
+            "the serving exemplar (stateful tower decode for ssm/hybrid "
+            "towers is an open item)")
 
     # -- convenience ---------------------------------------------------------
 
@@ -242,6 +298,117 @@ class TokenLMSplitProgram(SplitProgram):
         return self._loader_feature_fn(
             batch=batch, seq=seq, seed=seed, microbatches=microbatches,
             extract=lambda b: b["tokens"])
+
+    # -- serving -------------------------------------------------------------
+    #
+    # The split of backbone.prefill_tokens / backbone.decode_step along the
+    # cut: the tower half (embedding-column slice -> proj_in -> tower blocks
+    # -> proj_out, with the tower KV cache) runs at the client; the server
+    # half (server stack -> final norm -> unembed, with the server KV cache)
+    # runs at role 0 from the MERGED cut.  Both halves use the same
+    # dense_stack_prefill / dense_stack_decode primitives and the same
+    # position bookkeeping as the monolithic path, so greedy split decode is
+    # token-identical to serve.decode.generate (asserted in
+    # tests/test_split_serve.py).  Dense family only: ssm/hybrid towers
+    # carry recurrent state whose serving session shape is an open item, and
+    # moe serving would need the expert caches slot-aware.
+
+    def _require_dense_serving(self):
+        if self.cfg.family != "dense":
+            raise NotImplementedError(
+                f"{self.cfg.name}: split serving is implemented for the "
+                f"dense token-LM family only (got {self.cfg.family!r}) — "
+                "stateful ssm/hybrid tower sessions and slot-aware moe "
+                "expert caches are open items")
+
+    def tower_serve_fns(self, client: int) -> TowerServeFns:
+        self._require_dense_serving()
+        from repro.models.backbone import _tower_dims
+
+        cfg = self.cfg
+        dims_t = _tower_dims(cfg)
+
+        def prefill(tp, tokens, cache_len):
+            S = tokens.shape[1]
+            x = jnp.take(tp["embed_slice"], tokens, axis=0)  # (1, S, d/K)
+            positions = jnp.arange(S, dtype=jnp.int32)
+            h = x @ tp["proj_in"]
+            h, ks, vs = tfm.dense_stack_prefill(tp["blocks"], h, dims_t,
+                                                positions=positions)
+            cut = h @ tp["proj_out"]
+            Lt, B, _, Kv, hd = ks.shape
+            k = jax.lax.dynamic_update_slice_in_dim(
+                jnp.zeros((Lt, B, cache_len, Kv, hd), ks.dtype), ks, 0, axis=2)
+            v = jax.lax.dynamic_update_slice_in_dim(
+                jnp.zeros((Lt, B, cache_len, Kv, hd), vs.dtype), vs, 0, axis=2)
+            kv_positions = jax.lax.dynamic_update_slice_in_dim(
+                jnp.zeros((cache_len,), jnp.int32) - 1, positions, 0, axis=0)
+            session = {"k": k, "v": v, "kv_positions": kv_positions,
+                       "index": jnp.asarray(S, jnp.int32)}
+            return cut, session
+
+        def decode(tp, session, token):
+            x = jnp.take(tp["embed_slice"], token[:, None], axis=0)  # (1,1,·)
+            h = x @ tp["proj_in"]
+            h, nk, nv, npos, _ = tfm.dense_stack_decode(
+                tp["blocks"], h, session["k"], session["v"],
+                session["index"], session["kv_positions"], dims_t,
+                position=session["index"])
+            cut = h @ tp["proj_out"]
+            new = {"k": nk, "v": nv, "kv_positions": npos,
+                   "index": session["index"] + 1}
+            return cut, new
+
+        return TowerServeFns(prefill=jax.jit(prefill, static_argnums=2),
+                             decode=jax.jit(decode))
+
+    def server_serve_fns(self) -> ServerServeFns:
+        self._require_dense_serving()
+        from repro.models.backbone import _server_layers
+
+        cfg = self.cfg
+        dims = BlockDims.from_arch(cfg)
+        n_server = _server_layers(cfg)
+
+        def init_cache(cache_len):
+            kv = (n_server, 1, cache_len, dims.n_kv_heads, dims.head_dim)
+            return {
+                "k": jnp.zeros(kv, jnp.float32),
+                "v": jnp.zeros(kv, jnp.float32),
+                "kv_positions": jnp.zeros((cache_len,), jnp.int32) - 1,
+                "index": jnp.zeros((), jnp.int32),
+            }
+
+        def prefill(sp, cache, merged):
+            S = merged.shape[1]
+            positions = jnp.arange(S, dtype=jnp.int32)
+            x, ks, vs = tfm.dense_stack_prefill(sp["server"], merged, dims,
+                                                positions=positions)
+            new = {
+                "k": jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], ks.astype(cache["k"].dtype), 0, axis=2),
+                "v": jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], vs.astype(cache["v"].dtype), 0, axis=2),
+                "kv_positions": jax.lax.dynamic_update_slice_in_dim(
+                    cache["kv_positions"], positions, 0, axis=0),
+                "index": jnp.asarray(S, jnp.int32),
+            }
+            x = tfm._norm(sp["final_norm"], x, dims.norm, dims.norm_eps)
+            logits = layers.unembed(sp["embed"], x[:, -1, :])
+            return logits, new
+
+        def decode(sp, cache, merged):
+            x, nk, nv, npos, _ = tfm.dense_stack_decode(
+                sp["server"], merged, cache["k"], cache["v"], cache["index"],
+                cache["kv_positions"], dims, position=cache["index"])
+            new = {"k": nk, "v": nv, "kv_positions": npos,
+                   "index": cache["index"] + 1}
+            x = tfm._norm(sp["final_norm"], x, dims.norm, dims.norm_eps)
+            logits = layers.unembed(sp["embed"], x)[:, 0, :]
+            return logits, new
+
+        return ServerServeFns(init_cache=init_cache, prefill=prefill,
+                              decode=decode)
 
 
 # ---------------------------------------------------------------------------

@@ -58,6 +58,7 @@ from repro.runtime.executor import (
 )
 from repro.runtime.links import LinkModel
 from repro.runtime.pipeline import StepPipeline
+from repro.runtime.serve_driver import ServeDriver
 from repro.runtime.topology import TREE_VERIFY_ATOL, AggTree
 
 __all__ = [
@@ -70,6 +71,7 @@ __all__ = [
     "Executor",
     "Resource",
     "LinkModel",
+    "ServeDriver",
     "MODES",
     "SimReport",
     "StepPipeline",

@@ -22,6 +22,9 @@ buffers, so cuts from step t+1 arriving while step t is being collected
 land where they belong instead of being lost or mis-merged.
 :meth:`run_step` is exactly ``submit_step`` + ``collect_step`` — the
 blocking one-step call every existing caller uses, bit-for-bit unchanged.
+Inference traffic pumps the same way in the serving sibling,
+:class:`~repro.runtime.serve_driver.ServeDriver`, with the ``(step,
+microbatch)`` key generalized to ``(request, position)``.
 
 At window W > 1 the towers train on delayed gradients — a step's forwards
 run before the previous step's optimizer update has reached the client, so

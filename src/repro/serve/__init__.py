@@ -1,0 +1,24 @@
+"""Serving: monolithic KV-cached decode and split inference serving.
+
+``repro.serve.decode`` decodes the monolithic model (prefill + sampling);
+``repro.serve.split_serve`` serves the SPLIT model over any
+``repro.transport`` backend — towers prefill feature slices once per
+request, role 0 caches the merged cut per session and decodes against
+vmapped slot KV caches with continuous batching.  Greedy split decode is
+token-identical to the monolithic path (tests/test_split_serve.py).
+"""
+from repro.serve.decode import (SamplingParams, batched_throughput_probe,
+                                generate, sample_token)
+from repro.serve.split_serve import (CutCache, ServeRequest, ServeResult,
+                                     SplitLMServer)
+
+__all__ = [
+    "SamplingParams",
+    "sample_token",
+    "generate",
+    "batched_throughput_probe",
+    "CutCache",
+    "ServeRequest",
+    "ServeResult",
+    "SplitLMServer",
+]

@@ -48,6 +48,14 @@ def generate(
     B, S_prompt = prompts.shape
     if cache_len is None:
         cache_len = S_prompt + max_new_tokens
+    elif not ring and S_prompt + max_new_tokens > cache_len:
+        # a ring cache wraps by design (sliding window); a linear cache
+        # that is too small would silently clamp writes into the last slot
+        raise ValueError(
+            f"cache_len={cache_len} cannot hold {S_prompt} prompt + "
+            f"{max_new_tokens} new tokens = {S_prompt + max_new_tokens} "
+            "positions — raise cache_len (or pass ring=True for "
+            "sliding-window decode)")
     cache = backbone.init_cache(cfg, B, cache_len, ring=ring)
     key = jax.random.PRNGKey(seed)
 
@@ -74,22 +82,38 @@ def generate(
 
 
 def batched_throughput_probe(params, cfg: ArchConfig, *, batch: int,
-                             cache_len: int, steps: int = 8) -> dict:
-    """Decode-throughput microbenchmark (tokens/s on this host)."""
+                             cache_len: int, steps: int = 8,
+                             warmup: int = 2, window: Optional[int] = None,
+                             ring: bool = False) -> dict:
+    """Decode-throughput microbenchmark (tokens/s on this host).
+
+    Takes the same decode knobs as :func:`generate` (``window``/``ring``)
+    so the probe measures the configuration actually served, and reports
+    the MEDIAN over per-step timings — single-sample numbers are hostage
+    to one scheduler hiccup, and BENCH trend lines need a robust center."""
+    import statistics
     import time
 
-    cache = backbone.init_cache(cfg, batch, cache_len)
-    serve_step = jax.jit(lambda p, c, t: backbone.decode_step(p, c, t, cfg))
+    cache = backbone.init_cache(cfg, batch, cache_len, ring=ring)
+    serve_step = jax.jit(
+        lambda p, c, t: backbone.decode_step(p, c, t, cfg, window=window,
+                                             ring=ring))
     tok = jnp.zeros((batch,), jnp.int32)
-    logits, cache = serve_step(params, cache, tok)  # compile
-    jax.block_until_ready(logits)
-    t0 = time.time()
-    for _ in range(steps):
+    for _ in range(max(1, warmup)):  # compile + settle caches/clocks
         logits, cache = serve_step(params, cache, tok)
     jax.block_until_ready(logits)
-    dt = time.time() - t0
+    times = []
+    for _ in range(steps):
+        t0 = time.perf_counter()
+        logits, cache = serve_step(params, cache, tok)
+        jax.block_until_ready(logits)
+        times.append(time.perf_counter() - t0)
+    dt = statistics.median(times)
     return {
-        "tokens_per_s": batch * steps / dt,
-        "ms_per_step": dt / steps * 1e3,
+        "tokens_per_s": batch / dt,
+        "ms_per_step": dt * 1e3,
         "batch": batch,
+        "steps": steps,
+        "window": window,
+        "ring": ring,
     }

@@ -54,6 +54,17 @@ Worker protocol (requests handled by :class:`TowerWorker`):
 * ``aggregate {step, mb, child, frame}``  -> ``tree_cut {mb, cut}`` once
   the subtree is complete for that ``(step, mb)``, else no response
   (parts may arrive in any order across adjacent in-flight steps)
+* ``serve_prefill {request, tokens, cache_len}`` ->
+  ``serve_prefill_cut {request, cut}`` (inference serving: run the tower's
+  feature slice through its blocks ONCE for the whole prompt and open a
+  per-request tower KV session; re-prefilling an existing request id
+  resets the session — the readmission path after a role-0 cut eviction)
+* ``serve_decode {request, token, pos}``  -> ``serve_cut {request, pos,
+  cut}`` (one autoregressive step against the request's KV session; the
+  worker cross-checks ``pos`` against its session index and fails loudly
+  on driver/worker desync)
+* ``serve_end {request}``                 -> no response (drop the
+  request's tower KV session; fire-and-forget)
 * ``get_params {}``                       -> ``params {params}``
 * ``shutdown {}``                         -> ``bye {}``
 

@@ -128,7 +128,8 @@ class TowerWorker:
                  feature_fn: Optional[Callable] = None, optimizer=None,
                  forward_delay_s: float = 0.0,
                  compress: Optional[str] = None,
-                 topk_fraction: float = 0.25):
+                 topk_fraction: float = 0.25,
+                 serve_fns=None):
         self.client_id = client_id
         self.tower_fwd = tower_fwd
         self.params = tower_params
@@ -141,6 +142,7 @@ class TowerWorker:
                 f"{compress!r} (choose from {comp_lib.SCHEMES})")
         self.compress = compress
         self.topk_fraction = topk_fraction
+        self.serve_fns = serve_fns  # TowerServeFns when the family serves
         self.opt_state = optimizer.init(tower_params) if optimizer else None
         self._feats: dict = {}  # (step, mb) -> feats awaiting backward
         self._step_params: dict = {}  # step -> params its forwards ran under
@@ -152,6 +154,7 @@ class TowerWorker:
         self._secure: Optional[dict] = None  # pair keys + round derivation
         self._relay_children: tuple = ()  # child ids when acting as a relay
         self._relay_parts: dict = {}  # (step, mb) -> {"self"|child_id: cut}
+        self._serve_sessions: dict = {}  # request id -> tower KV session
 
     # -- ops ----------------------------------------------------------------
 
@@ -171,12 +174,77 @@ class TowerWorker:
             return self._relay_accumulate(
                 request["step"], request["mb"], request["child"],
                 jnp.asarray(request["frame"]))
+        if op == "serve_prefill":
+            return self._serve_prefill(request)
+        if op == "serve_decode":
+            return self._serve_decode(request)
+        if op == "serve_end":
+            # fire-and-forget session teardown: nothing to reply, the
+            # driver retires the request without a barrier
+            self._serve_sessions.pop(request["request"], None)
+            return None
         if op == "get_params":
             return {"op": "params", "client": self.client_id,
                     "params": self.params}
         if op == "shutdown":
             return {"op": "bye", "client": self.client_id}
         raise ValueError(f"unknown op {op!r}")
+
+    # -- serving ops --------------------------------------------------------
+
+    def _require_serving(self) -> None:
+        if self.serve_fns is None:
+            raise ValueError(
+                f"client {self.client_id}: no serve_fns configured — split "
+                "serving needs the program's tower serving bundle "
+                "(SplitProgram.tower_serve_fns; dense family only)")
+        if self.compress is not None or self._secure is not None:
+            raise ValueError(
+                f"client {self.client_id}: serving frames are raw cut "
+                "tensors — cut compression and secure aggregation are "
+                "training-path features and do not compose with the "
+                "serving ops")
+
+    def _serve_prefill(self, request: dict) -> dict:
+        """One-time per-request tower prefill: embed the prompt through the
+        private embedding columns, fill a fresh tower KV session, uplink
+        the full-prompt cut slice.  Re-prefilling an existing request id
+        RESETS its session — the driver's readmission path after a role-0
+        cut-cache eviction."""
+        self._require_serving()
+        rid = request["request"]
+        tokens = jnp.asarray(request["tokens"], jnp.int32).reshape(1, -1)
+        cut, session = self.serve_fns.prefill(
+            self.params, tokens, int(request["cache_len"]))
+        self._serve_sessions[rid] = session
+        return {"op": "serve_prefill_cut", "client": self.client_id,
+                "request": rid, "cut": cut}
+
+    def _serve_decode(self, request: dict) -> dict:
+        """One decode round for one request: advance the request's tower
+        session by the last sampled token and uplink the (1, 1, cut) frame.
+        The frame echoes ``pos`` — the driver's ``(request, position)``
+        response key — and the worker checks it against the session clock,
+        so a desynchronized driver fails loudly instead of silently
+        decoding against the wrong cache slot."""
+        self._require_serving()
+        rid, pos = request["request"], int(request["pos"])
+        session = self._serve_sessions.get(rid)
+        if session is None:
+            raise ValueError(
+                f"client {self.client_id}: serve_decode for unknown "
+                f"request {rid!r} — prefill first (or the session was "
+                "ended/evicted without readmission)")
+        have = int(session["index"])
+        if have != pos:
+            raise ValueError(
+                f"client {self.client_id}: request {rid!r} decode position "
+                f"mismatch — driver says {pos}, tower session is at {have}")
+        token = jnp.asarray(request["token"], jnp.int32).reshape(1)
+        cut, session = self.serve_fns.decode(self.params, session, token)
+        self._serve_sessions[rid] = session
+        return {"op": "serve_cut", "client": self.client_id, "request": rid,
+                "pos": pos, "cut": cut}
 
     def _forward(self, request: dict) -> dict:
         if self.forward_delay_s > 0.0:

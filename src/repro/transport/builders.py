@@ -106,6 +106,15 @@ def build_split_worker(client_id: int, *, cfg, seed: int = 0, batch: int = 8,
             weight_decay=0.1, grad_clip_norm=grad_clip,
         )
 
+    # serving bundle where the family has one (dense today): the same
+    # worker then serves the split inference ops (serve_prefill /
+    # serve_decode) alongside training — families without a serving
+    # decomposition get a worker that refuses serving ops loudly
+    try:
+        serve_fns = program.tower_serve_fns(client_id)
+    except NotImplementedError:
+        serve_fns = None
+
     return TowerWorker(
         client_id, program.tower_fwd(client_id), towers_list[client_id],
         feature_fn=program.feature_fn(client_id, batch=batch, seq=seq,
@@ -114,6 +123,7 @@ def build_split_worker(client_id: int, *, cfg, seed: int = 0, batch: int = 8,
         forward_delay_s=forward_delay_s,
         compress=cfg.vertical.compression,
         topk_fraction=cfg.vertical.topk_fraction,
+        serve_fns=serve_fns,
     )
 
 

@@ -1,0 +1,207 @@
+"""Split inference serving: the greedy split decode must be token-identical
+to the monolithic ``serve.decode.generate``, every serving byte must
+reconcile exactly against ``costs.serve_*``, and the cut cache must evict
+and readmit deterministically."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import get_arch
+from repro.core import costs
+from repro.models import backbone, split_program
+from repro.serve import CutCache, SplitLMServer, generate
+from repro.serve.decode import batched_throughput_probe
+from repro.transport import InprocTransport, SimTransport, build_split_worker
+
+ARCH = "smollm-360m"  # dense family, K=2 feature holders, d_model=256
+
+# mixed-length workload: heterogeneous prompts AND remaining-token counts,
+# so continuous batching actually retires/admits mid-flight
+PROMPT_LENS = [8, 5, 12, 7]
+NEW_TOKENS = [6, 9, 4, 8]
+CACHE_LEN = 32
+
+
+def _setup():
+    cfg = get_arch(ARCH).reduced()
+    params = backbone.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = [
+        jax.random.randint(jax.random.PRNGKey(i + 1), (s,), 0, cfg.vocab_size)
+        for i, s in enumerate(PROMPT_LENS)
+    ]
+    return cfg, params, prompts
+
+
+def _workers(cfg):
+    return [build_split_worker(k, cfg=cfg, seed=0, batch=2, seq=16)
+            for k in range(cfg.vertical.num_clients)]
+
+
+def _reference_tokens(params, cfg, prompts):
+    return [
+        generate(params, cfg, p[None], max_new_tokens=n).tolist()[0]
+        for p, n in zip(prompts, NEW_TOKENS)
+    ]
+
+
+@pytest.mark.parametrize("transport_cls", [SimTransport, InprocTransport])
+@pytest.mark.parametrize("continuous", [True, False])
+def test_split_decode_token_identical(transport_cls, continuous):
+    """Greedy split decode == monolithic generate, token for token, over
+    both a mixed-length continuous batch and the static baseline."""
+    cfg, params, prompts = _setup()
+    expect = _reference_tokens(params, cfg, prompts)
+    _, server = split_program.get_program(cfg).partition(params)
+    with transport_cls(_workers(cfg)) as tr:
+        srv = SplitLMServer(tr, cfg, server, cache_len=CACHE_LEN,
+                            max_batch=2, continuous=continuous)
+        for p, n in zip(prompts, NEW_TOKENS):
+            srv.submit(p, max_new_tokens=n)
+        results = srv.run()
+    assert [r.tokens for r in results] == expect
+    assert srv.stats["requests"] == len(prompts)
+    assert srv.stats["tokens"] == sum(NEW_TOKENS)
+    if continuous:
+        # heterogeneous remaining lengths force a mid-flight admit
+        assert srv.stats["peak_active"] == 2
+
+
+def test_ledger_reconciles_with_cost_model():
+    """Every audited serving byte equals the closed-form ``costs.serve_*``
+    prediction — no unexplained traffic in either direction."""
+    cfg, params, prompts = _setup()
+    _, server = split_program.get_program(cfg).partition(params)
+    K = cfg.vertical.num_clients
+    with SimTransport(_workers(cfg)) as tr:
+        srv = SplitLMServer(tr, cfg, server, cache_len=CACHE_LEN, max_batch=2)
+        for p, n in zip(prompts, NEW_TOKENS):
+            srv.submit(p, max_new_tokens=n)
+        srv.run()
+    led = srv.ledger
+    total_prompt = sum(PROMPT_LENS)
+    # each request prefills exactly once here (no eviction pressure)
+    assert srv.stats["prefills"] == len(prompts)
+    assert srv.stats["reprefills"] == 0
+    pf = costs.serve_prefill_bytes(total_prompt, cfg.d_model, K)
+    # first token comes from prefill logits: N requests cost N fewer rounds
+    rounds = srv.stats["tokens"] - srv.stats["requests"]
+    assert rounds == sum(n - 1 for n in NEW_TOKENS)
+    dc = costs.serve_decode_bytes(cfg.d_model, K, rounds=rounds)
+    assert led.sent_by("role0") == pf["role0_sent"] + dc["role0_sent"]
+    assert led.received_by("role0") == (pf["role0_received"]
+                                        + dc["role0_received"])
+    # per-tag: prompts down, prefill cuts up, tokens down, cut frames up
+    for k in range(K):
+        assert led.bytes_with_tag(f"serve_prompt[{k}]") == total_prompt * 4
+        assert led.bytes_with_tag(f"serve_prefill_cut[{k}]") == \
+            total_prompt * cfg.d_model * 4
+        assert led.bytes_with_tag(f"serve_token[{k}]") == rounds * 4
+        assert led.bytes_with_tag(f"serve_cut[{k}]") == \
+            rounds * cfg.d_model * 4
+    wire = srv.wire_report()
+    assert wire["total"] == led.total()
+    assert wire["total"] == pf["total"] + dc["total"]
+
+
+def test_cut_cache_eviction_and_readmission():
+    """Capacity for only two resident cuts, one decode slot: prefill-ahead
+    evicts waiting LRU cuts, scheduling the evicted request re-prefills it
+    (readmission), and the served tokens are STILL exact."""
+    cfg, params, prompts = _setup()
+    S, n_new = 8, 4
+    same = [jax.random.randint(jax.random.PRNGKey(i + 10), (S,), 0,
+                               cfg.vocab_size) for i in range(4)]
+    expect = [generate(params, cfg, p[None], max_new_tokens=n_new).tolist()[0]
+              for p in same]
+    _, server = split_program.get_program(cfg).partition(params)
+    with InprocTransport(_workers(cfg)) as tr:
+        srv = SplitLMServer(tr, cfg, server, cache_len=CACHE_LEN,
+                            max_batch=1,
+                            cut_cache_bytes=2 * S * cfg.d_model * 4)
+        for p in same:
+            srv.submit(p, max_new_tokens=n_new)
+        results = srv.run()
+    assert [r.tokens for r in results] == expect
+    cs = srv.cut_cache.stats
+    assert cs["evictions"] >= 2  # prefill-ahead pushed out waiting LRU cuts
+    assert srv.stats["reprefills"] >= 1  # evicted requests were readmitted
+    assert srv.stats["prefills"] == (len(same) + srv.stats["reprefills"])
+    assert cs["misses"] >= srv.stats["reprefills"]
+
+
+def test_admission_deferred_under_pin_pressure():
+    """Capacity for ~1.5 cuts: the second request cannot be made resident
+    while the first session is pinned, so its admission is DEFERRED until
+    the first retires — never a CutCache overflow, tokens still exact."""
+    cfg, params, _ = _setup()
+    S, n_new = 8, 4
+    prompts = [jax.random.randint(jax.random.PRNGKey(i + 20), (S,), 0,
+                                  cfg.vocab_size) for i in range(2)]
+    expect = [generate(params, cfg, p[None], max_new_tokens=n_new).tolist()[0]
+              for p in prompts]
+    _, server = split_program.get_program(cfg).partition(params)
+    with SimTransport(_workers(cfg)) as tr:
+        srv = SplitLMServer(tr, cfg, server, cache_len=CACHE_LEN,
+                            max_batch=2,
+                            cut_cache_bytes=(3 * S * cfg.d_model * 4) // 2)
+        for p in prompts:
+            srv.submit(p, max_new_tokens=n_new)
+        results = srv.run()
+    assert [r.tokens for r in results] == expect
+    assert srv.stats["peak_active"] == 1  # second request had to wait
+
+
+def test_cut_cache_unit():
+    cache = CutCache(capacity_bytes=3 * 16)  # three 4-float cuts
+    cuts = {r: jnp.full((1, 4), float(r)) for r in range(5)}
+    for r in range(3):
+        cache.put(r, cuts[r])
+    assert len(cache) == 3 and cache.total_bytes == 48
+    cache.pin(0)
+    cache.put(3, cuts[3])  # evicts LRU unpinned = rid 1
+    assert 1 not in cache and 0 in cache
+    assert cache.stats["evictions"] == 1
+    assert cache.get(1) is None  # miss counted
+    assert cache.stats["misses"] == 1
+    assert float(cache.get(2)[0, 0]) == 2.0  # hit moves to MRU
+    cache.put(4, cuts[4])  # now rid 3 is LRU unpinned
+    assert 3 not in cache and 2 in cache
+    cache.release(0)
+    assert 0 not in cache
+    assert not CutCache(capacity_bytes=16).can_admit(17)
+    with pytest.raises(ValueError):
+        CutCache(capacity_bytes=0)
+
+
+def test_admission_control_rejects_oversized_cut():
+    cfg, params, _ = _setup()
+    _, server = split_program.get_program(cfg).partition(params)
+    with SimTransport(_workers(cfg)) as tr:
+        srv = SplitLMServer(tr, cfg, server, cache_len=CACHE_LEN,
+                            cut_cache_bytes=4 * cfg.d_model * 4)
+        with pytest.raises(ValueError, match="admission control"):
+            srv.submit(jnp.zeros((8,), jnp.int32), max_new_tokens=2)
+        with pytest.raises(ValueError, match="cache slots"):
+            srv.submit(jnp.zeros((4,), jnp.int32),
+                       max_new_tokens=CACHE_LEN)
+        with pytest.raises(ValueError, match="max_new_tokens"):
+            srv.submit(jnp.zeros((2,), jnp.int32), max_new_tokens=0)
+
+
+def test_generate_rejects_overflowing_cache_len():
+    cfg, params, _ = _setup()
+    prompts = jnp.zeros((1, 8), jnp.int32)
+    with pytest.raises(ValueError, match="cache_len"):
+        generate(params, cfg, prompts, max_new_tokens=8, cache_len=12)
+    # ring caches wrap by design — same sizes must be accepted
+    toks = generate(params, cfg, prompts, max_new_tokens=8, cache_len=12,
+                    ring=True)
+    assert toks.shape == (1, 8)
+
+
+def test_throughput_probe_knobs():
+    cfg, params, _ = _setup()
+    rep = batched_throughput_probe(params, cfg, batch=2, cache_len=16,
+                                   steps=3, warmup=1, window=8, ring=True)
+    assert rep["tokens_per_s"] > 0
+    assert rep["steps"] == 3 and rep["window"] == 8 and rep["ring"] is True
