@@ -18,6 +18,35 @@ def _emit(name: str, us: float, derived: str = "") -> None:
     print(f"{name},{us:.1f},{derived}")
 
 
+def _check_bench_json(path: str) -> None:
+    """Validate a written perf artifact against the committed contract
+    (benchmarks/bench_schema.json) — the CI gate that keeps the tracked
+    trajectory's shape stable across PRs.  Raises SystemExit on drift."""
+    import os
+
+    import jsonschema
+
+    if not os.path.exists(path):
+        raise SystemExit(
+            f"--check: {path} does not exist — run the benchmarks first "
+            "(e.g. python -m benchmarks.run --only split_exec)")
+    schema_path = os.path.join(os.path.dirname(__file__),
+                               "bench_schema.json")
+    with open(schema_path) as f:
+        schema = json.load(f)
+    with open(path) as f:
+        artifact = json.load(f)
+    try:
+        jsonschema.validate(artifact, schema)
+    except jsonschema.ValidationError as e:
+        loc = "/".join(str(p) for p in e.absolute_path) or "<root>"
+        raise SystemExit(
+            f"--check: {path} violates bench_schema.json at {loc}: "
+            f"{e.message}")
+    sections = {k: len(v) for k, v in artifact.items()}
+    print(f"{path} conforms to bench_schema.json ({sections})")
+
+
 def bench_kernels() -> None:
     """Microbenchmarks of the kernel oracles (CPU host timings)."""
     import jax
@@ -628,7 +657,14 @@ def main(argv=None) -> int:
                     help="machine-readable split-execution perf artifact "
                          "(per-family, per-transport, serial W=1 vs "
                          "cross-step W>1); tracked across PRs by CI")
+    ap.add_argument("--check", action="store_true",
+                    help="validate the --bench-json artifact against "
+                         "benchmarks/bench_schema.json and exit (CI gate)")
     args = ap.parse_args(argv)
+
+    if args.check:
+        _check_bench_json(args.bench_json)
+        return 0
 
     only = None
     if args.only:

@@ -1,0 +1,11 @@
+"""Static protocol-conformance analysis (``python -m repro.analysis``).
+
+The runtime dispatches from three declarative registries (wire kinds,
+worker/response ops, compat rules); this package lints the sources
+against them so the registries stay the single source of truth.  See
+:mod:`repro.analysis.protolint` for the rule catalogue.
+"""
+from repro.analysis.protolint import run
+from repro.analysis.report import Finding, format_findings
+
+__all__ = ["run", "Finding", "format_findings"]

@@ -1,0 +1,37 @@
+"""CLI for the protocol conformance linter.
+
+    PYTHONPATH=src python -m repro.analysis [--root PATH] [--strict]
+
+Prints one line per finding (grep-friendly, stable order) and a summary
+tail.  ``--strict`` exits non-zero on any finding — the CI mode.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.analysis.protolint import run
+from repro.analysis.report import format_findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="cross-layer protocol conformance linter")
+    ap.add_argument(
+        "--root", type=Path,
+        default=Path(__file__).resolve().parents[3],
+        help="repo root (default: inferred from this file's location)")
+    ap.add_argument(
+        "--strict", action="store_true",
+        help="exit 1 when there is any finding (CI mode)")
+    args = ap.parse_args(argv)
+
+    findings = run(args.root)
+    print(format_findings(findings))
+    return 1 if (args.strict and findings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,132 @@
+"""Thread-ownership lint (rule T001) for the shared response pump.
+
+The executor/serving drivers and the threaded transports share one
+discipline: background threads communicate with the driver thread ONLY
+through thread-safe queues.  A background function that mutates any other
+``self`` field races the driver's pump.  This lint makes the discipline
+checkable: :data:`OWNERSHIP` declares, per audited file, which functions
+run off-thread and which ``self`` fields each may mutate (its queues);
+everything else those functions touch mutably is a finding, as is any
+``threading.Thread(target=self.X)`` whose target is not declared here.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from repro.analysis.report import Finding
+from repro.analysis.walker import ModuleSource
+
+#: method names that mutate their receiver (queue ops + container ops)
+MUTATORS = {
+    "put", "get", "put_nowait", "get_nowait",
+    "append", "appendleft", "pop", "popleft",
+    "add", "remove", "discard", "clear", "update",
+    "setdefault", "extend", "insert",
+}
+
+#: audited file -> {off-thread function name -> self fields it may mutate}.
+#: Files with an empty dict run everything on the driver thread: any
+#: Thread() they create must target a function declared SOMEWHERE here.
+OWNERSHIP: dict[str, dict[str, frozenset]] = {
+    "src/repro/transport/inproc.py": {
+        # worker threads: drain their request queue, feed the shared
+        # response queue — nothing else on the transport is theirs
+        "_serve": frozenset({"_requests", "_responses"}),
+    },
+    "src/repro/transport/tree.py": {
+        # router pump thread: routes base responses into the out queue
+        "_pump": frozenset({"_out"}),
+        # called from the pump thread (and inline for SimTransport); only
+        # builds requests/deliverables, owns no state beyond the out queue
+        "_route": frozenset({"_out"}),
+    },
+    "src/repro/runtime/executor.py": {},
+    "src/repro/runtime/serve_driver.py": {},
+}
+
+
+def _self_root(node: ast.AST) -> Optional[str]:
+    """First attribute name in a ``self``-rooted attribute/subscript/call
+    chain (``self._requests[client].get`` -> ``_requests``), else None."""
+    while True:
+        if isinstance(node, ast.Attribute):
+            if isinstance(node.value, ast.Name) and node.value.id == "self":
+                return node.attr
+            node = node.value
+        elif isinstance(node, ast.Subscript):
+            node = node.value
+        elif isinstance(node, ast.Call):
+            node = node.func
+        else:
+            return None
+
+
+def _check_function(mod: ModuleSource, fn: ast.FunctionDef,
+                    owned: frozenset, findings: list) -> None:
+    for node in ast.walk(fn):
+        roots: list[tuple[str, int, str]] = []
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for t in targets:
+                r = _self_root(t)
+                if r is not None:
+                    roots.append((r, node.lineno, "assigns"))
+        elif isinstance(node, ast.Delete):
+            for t in node.targets:
+                r = _self_root(t)
+                if r is not None:
+                    roots.append((r, node.lineno, "deletes"))
+        elif isinstance(node, ast.Call) \
+                and isinstance(node.func, ast.Attribute) \
+                and node.func.attr in MUTATORS:
+            r = _self_root(node.func.value)
+            if r is not None:
+                roots.append((r, node.lineno,
+                              f"calls .{node.func.attr}() on"))
+        for root, line, verb in roots:
+            if root not in owned:
+                findings.append(Finding(
+                    "T001", mod.relpath, line,
+                    f"off-thread function {fn.name!r} {verb} self.{root}, "
+                    f"which it does not own (owned: "
+                    f"{sorted(owned) or 'nothing'}) — share state with "
+                    "the driver thread through its queues only"))
+
+
+def check_module(mod: ModuleSource) -> list[Finding]:
+    """Run the ownership lint over one audited module."""
+    findings: list[Finding] = []
+    declared = OWNERSHIP.get(mod.relpath, {})
+    all_declared = {name for per_file in OWNERSHIP.values()
+                    for name in per_file}
+
+    # 1) every Thread(target=...) must point at a declared entrypoint
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fname = (node.func.attr if isinstance(node.func, ast.Attribute)
+                 else node.func.id if isinstance(node.func, ast.Name)
+                 else "")
+        if fname != "Thread":
+            continue
+        for kw in node.keywords:
+            if kw.arg != "target":
+                continue
+            tgt = kw.value
+            name = (tgt.attr if isinstance(tgt, ast.Attribute)
+                    else tgt.id if isinstance(tgt, ast.Name) else None)
+            if name is None or name not in all_declared:
+                findings.append(Finding(
+                    "T001", mod.relpath, node.lineno,
+                    f"Thread target {ast.unparse(tgt)!r} is not a declared "
+                    "off-thread entrypoint — declare it (and the fields it "
+                    "owns) in repro.analysis.ownership.OWNERSHIP"))
+
+    # 2) every declared off-thread function mutates only its owned fields
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node.name in declared:
+            _check_function(mod, node, declared[node.name], findings)
+    return findings

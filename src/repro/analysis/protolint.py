@@ -1,0 +1,293 @@
+"""Protolint: cross-layer protocol conformance rules.
+
+The three declarative registries — :data:`repro.core.protocol.WIRE_KINDS`,
+:data:`repro.transport.ops.WORKER_OPS` / ``RESPONSE_OPS``, and
+:data:`repro.core.compat.RULES` — are what the RUNTIME dispatches from.
+This linter closes the loop statically: every string literal the sources
+use as a kind or an op must be registered, every registered name must be
+produced/consumed/costed/tested, every compat rule must have a live
+``compat.check`` call at every layer it declares, the human-facing
+contract docs must not drift from the registries, and the threaded
+transports must respect queue-only ownership.
+
+Rules:
+
+* W001 — every kind literal in ``src/`` is registered in WIRE_KINDS
+* W002 — every registered kind's ``cost_model`` exists in repro.core.costs
+* W003 — every registered kind is produced by a schedule in protocol.py
+* W004 — every registered kind is referenced by at least one tests/ file
+* O001 — every op literal in ``src/`` is a registered worker/response op
+* O002 — every worker op's handler exists on TowerWorker and its declared
+  responses are registered
+* O003 — every worker op is submitted by some driver outside base.py, and
+  every response op is built by some module (no phantom verbs)
+* C001 — every compat rule has a ``compat.check`` call passing its feature
+  kwargs at EVERY layer the rule declares
+* D001 — transport/__init__ documents every worker op, ROADMAP.md names
+  every worker op, and docs/compat_matrix.md matches
+  ``compat.render_markdown()`` exactly
+* T001 — thread-ownership: off-thread functions mutate only their
+  declared queues (see repro.analysis.ownership)
+
+``run(root)`` is pure analysis over sources read from disk (or from the
+``overrides`` map — repo-relative path -> text — so tests can seed broken
+fixtures and mutations without touching the repo).
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Optional
+
+from repro.analysis import ownership, walker
+from repro.analysis.report import Finding
+from repro.core import compat
+from repro.core.protocol import WIRE_KINDS
+from repro.transport.ops import RESPONSE_OPS, WORKER_OPS
+
+PROTOCOL_PY = "src/repro/core/protocol.py"
+COSTS_PY = "src/repro/core/costs.py"
+BASE_PY = "src/repro/transport/base.py"
+OPS_PY = "src/repro/transport/ops.py"
+TRANSPORT_INIT = "src/repro/transport/__init__.py"
+ROADMAP = "ROADMAP.md"
+COMPAT_DOC = "docs/compat_matrix.md"
+
+#: the modules that speak the WIRE kind namespace.  Other layers have
+#: their own (unrelated) "kind" vocabularies — input-shape kinds in
+#: configs/launch, norm/mlp kinds in models, HLO collective kinds in
+#: sharding — which W001 must not drag into the wire registry.
+KIND_SCOPE = (
+    "src/repro/core/protocol.py",
+    "src/repro/core/costs.py",
+    "src/repro/runtime/",
+    "src/repro/transport/",
+    "src/repro/serve/",
+    "src/repro/train/",
+)
+
+
+def _read_text(root: Path, relpath: str,
+               overrides: Optional[dict]) -> Optional[str]:
+    if overrides and relpath in overrides:
+        return overrides[relpath]
+    p = root / relpath
+    return p.read_text() if p.exists() else None
+
+
+def _load_src(root: Path, overrides: Optional[dict]
+              ) -> dict[str, walker.ModuleSource]:
+    return {rel: walker.load_module(root, rel, overrides)
+            for rel in walker.iter_src_files(root, overrides)}
+
+
+# -- wire kinds (W) ---------------------------------------------------------
+
+def _check_kinds(src: dict, root: Path, overrides: Optional[dict],
+                 findings: list) -> None:
+    kinds = set(WIRE_KINDS)
+
+    # W001: every kind literal registered
+    for rel, mod in src.items():
+        if rel == OPS_PY or not rel.startswith(KIND_SCOPE):
+            continue
+        for literal, line in walker.kind_literals(mod):
+            if literal not in kinds:
+                findings.append(Finding(
+                    "W001", rel, line,
+                    f"unregistered wire kind {literal!r} — register it in "
+                    "protocol.WIRE_KINDS (direction, phase, costs.* byte "
+                    "model) before scheduling it"))
+
+    # W002: every kind priced by an existing costs.* function
+    costs_mod = src.get(COSTS_PY)
+    cost_fns = walker.function_defs(costs_mod) if costs_mod else set()
+    for kind, spec in WIRE_KINDS.items():
+        if spec.cost_model not in cost_fns:
+            findings.append(Finding(
+                "W002", COSTS_PY, 0,
+                f"kind {kind!r} declares cost model "
+                f"{spec.cost_model!r}, which is not a function in "
+                "repro.core.costs — every wire kind must be priceable"))
+
+    # W003: every kind produced by a schedule constructor
+    proto_mod = src.get(PROTOCOL_PY)
+    produced = (walker.produced_kind_literals(proto_mod, kinds)
+                if proto_mod else set())
+    for kind in sorted(kinds - produced):
+        findings.append(Finding(
+            "W003", PROTOCOL_PY, 0,
+            f"kind {kind!r} is registered but no schedule in protocol.py "
+            "produces it — dead registry entries hide real drift"))
+
+    # W004: every kind referenced from tests/ (ledger reconciliation)
+    tests_text = []
+    tests_dir = root / "tests"
+    if tests_dir.exists():
+        for p in sorted(tests_dir.rglob("*.py")):
+            rel = p.relative_to(root).as_posix()
+            text = _read_text(root, rel, overrides)
+            if text:
+                tests_text.append(text)
+    if overrides:
+        tests_text += [t for rel, t in overrides.items()
+                       if rel.startswith("tests/") and rel.endswith(".py")
+                       and not (root / rel).exists()]
+    blob = "\n".join(tests_text)
+    for kind in sorted(kinds):
+        if kind not in blob:
+            findings.append(Finding(
+                "W004", "tests/", 0,
+                f"kind {kind!r} has no tests/ reference — every wire kind "
+                "needs at least one ledger/cost reconciliation test"))
+
+
+# -- worker ops (O) ---------------------------------------------------------
+
+def _check_ops(src: dict, findings: list) -> None:
+    known = set(WORKER_OPS) | set(RESPONSE_OPS)
+    submitted: dict[str, set] = {}   # op -> files with {"op": op} dicts
+    built: dict[str, set] = {}       # op -> any file building/naming it
+
+    for rel, mod in src.items():
+        if rel == OPS_PY:
+            continue  # the registry declaring an op is not traffic
+        lits = walker.op_literals(mod)
+        # O001: every op literal registered
+        for ctx in ("dict", "compare"):
+            for literal, line in lits[ctx]:
+                if literal not in known:
+                    findings.append(Finding(
+                        "O001", rel, line,
+                        f"unregistered wire op {literal!r} — declare it in "
+                        "transport.ops (WORKER_OPS/RESPONSE_OPS) before "
+                        "putting it on the wire"))
+        for literal, _ in lits["dict"]:
+            submitted.setdefault(literal, set()).add(rel)
+            built.setdefault(literal, set()).add(rel)
+        for literal, _ in lits["compare"]:
+            built.setdefault(literal, set()).add(rel)
+
+    # O002: handlers exist; declared responses are registered
+    base_mod = src.get(BASE_PY)
+    methods = (walker.class_methods(base_mod, "TowerWorker")
+               if base_mod else set())
+    for op, spec in WORKER_OPS.items():
+        if spec.handler not in methods:
+            findings.append(Finding(
+                "O002", BASE_PY, 0,
+                f"op {op!r} dispatches to TowerWorker.{spec.handler}, "
+                "which does not exist"))
+        for resp in spec.responses:
+            if resp not in RESPONSE_OPS:
+                findings.append(Finding(
+                    "O002", OPS_PY, 0,
+                    f"op {op!r} declares response {resp!r}, which is not "
+                    "in RESPONSE_OPS"))
+
+    # O003: bijection — every served op has a caller, every response op a
+    # builder (base.py submitting to itself does not count as a driver)
+    for op in WORKER_OPS:
+        callers = submitted.get(op, set()) - {BASE_PY}
+        if not callers:
+            findings.append(Finding(
+                "O003", BASE_PY, 0,
+                f"worker op {op!r} is served but never submitted by any "
+                "driver — a phantom verb the wire never carries"))
+    for op in RESPONSE_OPS:
+        if op not in built:
+            findings.append(Finding(
+                "O003", OPS_PY, 0,
+                f"response op {op!r} is registered but never built or "
+                "routed anywhere in src/"))
+
+
+# -- compat matrix (C) ------------------------------------------------------
+
+def _check_compat(src: dict, findings: list) -> None:
+    calls_by_layer: dict[str, list[set]] = {}
+    for layer, rel in compat.LAYER_MODULES.items():
+        mod = src.get(rel)
+        if mod is None:
+            findings.append(Finding(
+                "C001", rel, 0,
+                f"compat layer {layer!r} maps to a missing module"))
+            continue
+        calls_by_layer[layer] = [
+            kwargs for (call_layer, kwargs, _) in
+            walker.compat_check_calls(mod) if call_layer == layer]
+
+    for rule in compat.RULES:
+        needed = {compat.FEATURE_KWARGS[f] for f in rule.features}
+        for layer in rule.layers:
+            rel = compat.LAYER_MODULES.get(layer, "?")
+            calls = calls_by_layer.get(layer, [])
+            if not any(needed <= kwargs for kwargs in calls):
+                findings.append(Finding(
+                    "C001", rel, 0,
+                    f"compat rule {rule.key!r} declares enforcement at "
+                    f"layer {layer!r}, but no compat.check({layer!r}, ...) "
+                    f"call there passes {sorted(needed)} — the rejection "
+                    "is unreachable at this layer"))
+
+
+# -- contract docs (D) ------------------------------------------------------
+
+def _check_docs(src: dict, root: Path, overrides: Optional[dict],
+                findings: list) -> None:
+    init_mod = src.get(TRANSPORT_INIT)
+    doc = ""
+    if init_mod is not None:
+        import ast
+        doc = ast.get_docstring(init_mod.tree) or ""
+    for op in WORKER_OPS:
+        if f"``{op}" not in doc:
+            findings.append(Finding(
+                "D001", TRANSPORT_INIT, 0,
+                f"worker op {op!r} is not documented in the transport "
+                "op-contract docstring (expected a ``" + op + " ...`` "
+                "entry)"))
+
+    roadmap = _read_text(root, ROADMAP, overrides) or ""
+    for op in WORKER_OPS:
+        if op not in roadmap:
+            findings.append(Finding(
+                "D001", ROADMAP, 0,
+                f"worker op {op!r} missing from the ROADMAP transport "
+                "contract — the roadmap must track the op registry"))
+
+    committed = _read_text(root, COMPAT_DOC, overrides)
+    rendered = compat.render_markdown()
+    if committed is None:
+        findings.append(Finding(
+            "D001", COMPAT_DOC, 0,
+            "docs/compat_matrix.md is missing — generate it with "
+            "compat.render_markdown()"))
+    elif committed != rendered:
+        findings.append(Finding(
+            "D001", COMPAT_DOC, 0,
+            "docs/compat_matrix.md drifted from compat.render_markdown() "
+            "— regenerate it (command at the top of the file)"))
+
+
+# -- entry point ------------------------------------------------------------
+
+def run(root, overrides: Optional[dict] = None) -> list[Finding]:
+    """Run every rule; returns findings (empty list == conformant).
+
+    ``overrides`` maps repo-relative paths to replacement source text —
+    the fixture/mutation hook: the linter analyzes the override INSTEAD of
+    the on-disk file, so tests can prove each rule class catches its
+    seeded violation without mutating the repo.
+    """
+    root = Path(root)
+    findings: list[Finding] = []
+    src = _load_src(root, overrides)
+
+    _check_kinds(src, root, overrides, findings)
+    _check_ops(src, findings)
+    _check_compat(src, findings)
+    _check_docs(src, root, overrides, findings)
+    for rel in ownership.OWNERSHIP:
+        if rel in src:
+            findings.extend(ownership.check_module(src[rel]))
+    return findings

@@ -1,0 +1,29 @@
+"""Findings and their rendering for the protocol conformance linter."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One conformance violation: which rule, where, and what is wrong."""
+
+    rule: str  # W001..W004 | O001..O003 | C001 | D001 | T001
+    path: str  # repo-relative path of the offending file
+    line: int  # 1-indexed; 0 when the finding is file- or repo-level
+    message: str
+
+    def render(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"{self.rule} {loc}: {self.message}"
+
+
+def format_findings(findings: list[Finding]) -> str:
+    """Stable, grep-friendly report: one line per finding, sorted by rule
+    then location, with a one-line summary tail."""
+    ordered = sorted(findings, key=lambda f: (f.rule, f.path, f.line))
+    lines = [f.render() for f in ordered]
+    n = len(findings)
+    lines.append(f"protolint: {n} finding{'s' if n != 1 else ''}"
+                 if n else "protolint: clean")
+    return "\n".join(lines)

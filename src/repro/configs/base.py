@@ -94,11 +94,13 @@ class VerticalConfig:
     def __post_init__(self):
         if self.merge not in MERGE_STRATEGIES:
             raise ValueError(f"merge must be one of {MERGE_STRATEGIES}, got {self.merge!r}")
-        if self.secure_aggregation and self.merge not in ("sum", "avg"):
-            raise ValueError(
-                "secure aggregation requires an additively homomorphic merge "
-                f"(sum/avg), got {self.merge!r} — this mirrors the paper's §3 claim"
-            )
+        # lazy import: repro.core.compat must stay importable before the
+        # configs package finishes initializing (core imports configs)
+        from repro.core import compat
+
+        compat.check("config", secure=self.secure_aggregation,
+                     merge=self.merge,
+                     context=f"VerticalConfig(merge={self.merge!r})")
 
 
 @dataclass(frozen=True)

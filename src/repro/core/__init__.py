@@ -11,6 +11,7 @@ merge (bilinear), NoPeek leakage metric/penalty (leakage), and straggler
 EMA-imputation (straggler).
 """
 from repro.core import (  # noqa: F401
+    compat,  # first: leaf module, must be importable mid-cycle
     bilinear,
     compression,
     costs,

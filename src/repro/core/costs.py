@@ -55,6 +55,23 @@ def split_mlp_flops_per_sample(cfg: MLPSplitConfig) -> int:
     return total
 
 
+def cut_bytes(batch_size: int, cut_dim: int, itemsize: int = 4) -> int:
+    """Bytes of one PLAIN cut uplink (or its jacobian downlink) per client
+    per (micro)batch — the byte model of the ``cut`` / ``jac`` wire kinds,
+    cross-checked against the executor's ``cut[k]`` / ``jac[k]`` ledger
+    tags in tests."""
+    return batch_size * cut_dim * itemsize
+
+
+def head_exchange_bytes(batch_size: int, num_classes: int,
+                        itemsize: int = 4) -> int:
+    """Bytes of one leg of the role-0 <-> role-3 loss exchange per
+    (micro)batch — the ``head_out`` downlink and the ``head_jac`` uplink
+    are the same (B x num_classes) payload, cross-checked against the
+    ledger's ``head_output`` / ``head_jacobian`` tags in tests."""
+    return batch_size * num_classes * itemsize
+
+
 def key_exchange_bytes(num_clients: int, group_bytes: int = 0) -> dict:
     """Byte model of secure aggregation's ONE-TIME pairwise key-agreement
     round (``repro.core.secure_agg``), cross-checked against the executor's
@@ -444,8 +461,8 @@ def epoch_traffic(
         the moe router load-balance term).
     """
     num_batches = num_samples // batch_size
-    cut = batch_size * cfg.cut_dim * bytes_per_float
-    head = batch_size * cfg.num_classes * bytes_per_float
+    cut = cut_bytes(batch_size, cfg.cut_dim, bytes_per_float)
+    head = head_exchange_bytes(batch_size, cfg.num_classes, bytes_per_float)
     aux = aux_exchange_bytes(1) if aux_loss else 0
 
     role1 = RoleTraffic(

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.vertical_mlp import MLPSplitConfig
+from repro.core import compat
 from repro.core import merge as merge_lib
 
 
@@ -78,20 +79,79 @@ def _role_of(client: int, label_holder: int) -> str:
 # ---------------------------------------------------------------------------
 
 @dataclass(frozen=True)
+class WireKind:
+    """One registered message kind: its uplink/downlink direction, the
+    protocol phase it belongs to, and the ``repro.core.costs`` function
+    that prices its bytes (named, not referenced, so ``costs`` stays
+    import-light — the analyzer verifies the function exists)."""
+
+    kind: str
+    direction: str  # "up" (toward role 0) | "down" (from role 0)
+    phase: str      # "train" | "keyx" | "serve"
+    cost_model: str  # function name in repro.core.costs
+
+
+#: THE wire-kind registry — every ``MessageSpec.kind`` anywhere in the
+#: stack must be one of these (validated at MessageSpec construction and
+#: statically by ``repro.analysis``: every registered kind must have a
+#: cost model in repro.core.costs, a schedule producer in this module,
+#: and at least one tests/ reconciliation reference).
+WIRE_KINDS: dict[str, WireKind] = {spec.kind: spec for spec in (
+    WireKind(kind="cut", direction="up", phase="train",
+             cost_model="cut_bytes"),
+    WireKind(kind="masked_cut", direction="up", phase="train",
+             cost_model="masked_cut_bytes"),
+    WireKind(kind="compressed_cut", direction="up", phase="train",
+             cost_model="wire_bytes"),
+    WireKind(kind="tree_cut", direction="up", phase="train",
+             cost_model="tree_cut_bytes"),
+    WireKind(kind="head_out", direction="down", phase="train",
+             cost_model="head_exchange_bytes"),
+    WireKind(kind="aux", direction="down", phase="train",
+             cost_model="aux_exchange_bytes"),
+    WireKind(kind="head_jac", direction="up", phase="train",
+             cost_model="head_exchange_bytes"),
+    WireKind(kind="jac", direction="down", phase="train",
+             cost_model="cut_bytes"),
+    WireKind(kind="compressed_jac", direction="down", phase="train",
+             cost_model="wire_bytes"),
+    WireKind(kind="tree_jac", direction="down", phase="train",
+             cost_model="tree_cut_bytes"),
+    WireKind(kind="keyx_pub", direction="up", phase="keyx",
+             cost_model="key_exchange_bytes"),
+    WireKind(kind="keyx_bcast", direction="down", phase="keyx",
+             cost_model="key_exchange_bytes"),
+    WireKind(kind="serve_prompt", direction="down", phase="serve",
+             cost_model="serve_prefill_bytes"),
+    WireKind(kind="serve_prefill_cut", direction="up", phase="serve",
+             cost_model="serve_prefill_bytes"),
+    WireKind(kind="serve_token", direction="down", phase="serve",
+             cost_model="serve_decode_bytes"),
+    WireKind(kind="serve_cut", direction="up", phase="serve",
+             cost_model="serve_decode_bytes"),
+)}
+
+
+@dataclass(frozen=True)
 class MessageSpec:
     """One protocol message, independent of any payload: who sends what to
     whom.  ``client`` is the feature-holder index for cut/jac/key-exchange
-    messages and None for the role-0 <-> role-3 loss exchange."""
+    messages and None for the role-0 <-> role-3 loss exchange.  ``kind``
+    must be registered in :data:`WIRE_KINDS` — the runtime consumes the
+    registry, so an unregistered kind cannot even be scheduled."""
 
     sender: str
     receiver: str
     tag: str
-    # "cut" | "masked_cut" | "compressed_cut" | "tree_cut" | "head_out"
-    # | "aux" | "head_jac" | "jac" | "compressed_jac" | "tree_jac"
-    # | "keyx_pub" | "keyx_bcast"
-    # | "serve_prompt" | "serve_prefill_cut" | "serve_token" | "serve_cut"
     kind: str
     client: Optional[int] = None
+
+    def __post_init__(self):
+        if self.kind not in WIRE_KINDS:
+            raise ValueError(
+                f"unregistered wire kind {self.kind!r} (tag {self.tag!r}) "
+                f"— register it in protocol.WIRE_KINDS with a direction, "
+                f"phase, and costs.* byte model")
 
 
 @dataclass(frozen=True)
@@ -158,16 +218,7 @@ def step_schedule(num_clients: int, label_holder: int = 0, *,
                   secure: bool = False,
                   compress: Optional[str] = None,
                   tree=None) -> StepSchedule:
-    if secure and compress is not None:
-        raise ValueError(
-            "secure aggregation and cut compression cannot compose: "
-            "additive masks do not cancel through quantized/sparsified "
-            "values — run one or the other")
-    if tree is not None and compress is not None:
-        raise ValueError(
-            "the aggregation tree and cut compression cannot compose: "
-            "relays partial-sum raw (or masked) cut tensors, and codec "
-            "frames cannot be partial-summed — run one or the other")
+    compat.check("schedule", secure=secure, compress=compress, tree=tree)
     cut_kind = ("masked_cut" if secure
                 else "compressed_cut" if compress is not None else "cut")
     jac_kind = "compressed_jac" if compress is not None else "jac"
@@ -261,11 +312,21 @@ class ServeSchedule:
     cuts: tuple[MessageSpec, ...]
 
 
-def serve_schedule(num_clients: int, label_holder: int = 0) -> ServeSchedule:
+def serve_schedule(num_clients: int, label_holder: int = 0, *,
+                   secure: bool = False,
+                   compress: Optional[str] = None,
+                   tree=None) -> ServeSchedule:
     """The serving schedule for ``num_clients`` feature holders.  Serving
     has no label traffic, but the role naming stays consistent with
     :func:`step_schedule` so one ledger can audit a process that both
-    trains and serves."""
+    trains and serves.
+
+    Serving frames are raw cut tensors — the compat matrix (serve-secure /
+    serve-compress / serve-tree) rejects the training-path overlays right
+    here at schedule construction, so a driver cannot even build a serving
+    schedule over a masked, compressed, or tree-routed wire."""
+    compat.check("schedule", serve=True, secure=secure, compress=compress,
+                 tree=tree)
     return ServeSchedule(
         prompts=tuple(
             MessageSpec("role0", _role_of(k, label_holder),

@@ -86,6 +86,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import VerticalConfig, get_arch
+from repro.core import compat
 from repro.data.loader import LMBatchLoader
 from repro.train.loop import train
 
@@ -266,13 +267,17 @@ def main(argv=None):
             "--compress need a vertical config; this run is centralized "
             "(--vertical off or arch without one)"
         )
+    # every unsound flag composition rejects through the ONE compat matrix,
+    # phrased flag-first by compat.cli_reject; per-flag validation (ranges,
+    # transports) stays below
+    try:
+        compat.check(
+            "launch", secure=args.secure_agg, compress=args.compress or None,
+            tree=args.agg_tree_fanout, nowait=args.runtime == "nowait",
+            merge=cfg.vertical.merge if cfg.vertical is not None else None)
+    except compat.CompatError as e:
+        raise compat.cli_reject(e) from None
     if args.compress:
-        if args.secure_agg:
-            raise SystemExit(
-                "--compress cannot run with --secure-agg: additive masks do "
-                "not cancel through quantized/sparsified values (the merged "
-                "aggregate would be garbage and the uplinks no longer "
-                "blinded).  Pick one.")
         if not (0.0 < args.topk_fraction <= 1.0):
             raise SystemExit(
                 f"--topk-fraction must be in (0, 1], got {args.topk_fraction}")
@@ -285,11 +290,6 @@ def main(argv=None):
                 "--secure-agg needs split execution (--transport "
                 "inproc/multiproc): the sim path runs the monolithic "
                 "jitted step, there is no uplink to mask")
-        if args.runtime == "nowait":
-            raise SystemExit(
-                "--secure-agg cannot run with --runtime nowait: a "
-                "deadline-dropped client's pairwise masks do not cancel "
-                "(no dropout-recovery round)")
         try:
             cfg = cfg.with_vertical(dataclasses.replace(
                 cfg.vertical, secure_aggregation=True))
@@ -306,21 +306,6 @@ def main(argv=None):
                 f"--agg-tree-fanout must be >= 2, got {args.agg_tree_fanout} "
                 "(fanout 1 is a chain — every hop still serializes and role "
                 "0 gains nothing)")
-        if args.compress:
-            raise SystemExit(
-                "--agg-tree-fanout cannot run with --compress: relays "
-                "cannot partial-sum sparse/quantized frames without "
-                "breaking each stream's error-feedback state")
-        if args.runtime == "nowait":
-            raise SystemExit(
-                "--agg-tree-fanout cannot run with --runtime nowait: a "
-                "combined tree frame has no per-client arrival to deadline "
-                "or EMA-impute")
-        if cfg.vertical is not None and cfg.vertical.merge not in ("sum", "avg"):
-            raise SystemExit(
-                f"--agg-tree-fanout requires an additive merge (sum/avg); "
-                f"relay partial sums are not the true "
-                f"{cfg.vertical.merge!r} merge")
     if args.transport != "sim":
         # every family has a registered SplitProgram — this only rejects a
         # config with no vertical section (checked above) or an unknown

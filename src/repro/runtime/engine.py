@@ -33,6 +33,7 @@ from typing import Callable, Optional
 import jax.numpy as jnp
 
 from repro.configs.vertical_mlp import MLPSplitConfig
+from repro.core import compat
 from repro.core.costs import mlp_forward_flops, wire_bytes
 from repro.core.merge import collective_bytes_per_merge, merged_dim
 from repro.core.protocol import Ledger
@@ -92,15 +93,7 @@ def _check_tree_plan(tree_fanout: Optional[int], merge: str,
                      compress: Optional[str]) -> None:
     if tree_fanout is None:
         return
-    if merge not in ("sum", "avg"):
-        raise ValueError(
-            "tree aggregation needs an additively homomorphic merge "
-            f"(sum/avg); got merge={merge!r} — max/mul/concat have no "
-            "partial-sum regrouping to plan")
-    if compress is not None:
-        raise ValueError(
-            "tree aggregation cannot compose with cut compression: codec "
-            "frames cannot be partial-summed — plan one or the other")
+    compat.check("engine", tree=tree_fanout, merge=merge, compress=compress)
     if tree_fanout < 2:
         raise ValueError(f"tree_fanout must be >= 2, got {tree_fanout}")
 
@@ -116,9 +109,7 @@ def plan_step(cfg: MLPSplitConfig, batch_size: int, microbatches: int = 1,
     ``plan.cut_bytes``) at the codec's wire frame via ``costs.wire_bytes``.
     ``tree_fanout`` plans a fanout-F aggregation tree (additive merges
     only; mirrors the Executor's constructor rejections)."""
-    if secure and compress is not None:
-        raise ValueError("secure aggregation and cut compression cannot "
-                         "compose; plan one or the other")
+    compat.check("engine", secure=secure, compress=compress)
     _check_tree_plan(tree_fanout, cfg.merge, compress)
     if batch_size % microbatches:
         raise ValueError(f"batch {batch_size} not divisible by M={microbatches}")
@@ -179,9 +170,7 @@ def plan_from_arch(cfg, batch_size: int, seq_len: int, microbatches: int = 1,
         compress = v.compression
     if topk_fraction is None:
         topk_fraction = v.topk_fraction
-    if secure and compress is not None:
-        raise ValueError("secure aggregation and cut compression cannot "
-                         "compose; plan one or the other")
+    compat.check("engine", secure=secure, compress=compress)
     _check_tree_plan(tree_fanout, v.merge, compress)
     if batch_size % microbatches:
         raise ValueError(f"batch {batch_size} not divisible by M={microbatches}")
@@ -403,11 +392,8 @@ def simulate_pipelined(
                          f"{steps}/{cross_step}")
     tree = None
     if plan.tree_fanout:
-        if mode != "pipelined":
-            raise ValueError(
-                "tree aggregation is barrier-only: a client folded into a "
-                "relay's partial sum cannot be dropped at a no-wait "
-                "deadline")
+        compat.check("engine", tree=plan.tree_fanout,
+                     nowait=mode == "nowait")
         from repro.runtime.topology import AggTree
 
         tree = AggTree(plan.num_clients, plan.tree_fanout)

@@ -59,6 +59,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import compat
 from repro.core import compression as comp_lib
 from repro.core import merge as merge_lib
 from repro.core import straggler as straggler_lib
@@ -243,74 +244,21 @@ class Executor:
             drop_policy = "impute" if mode == "nowait" else "fused"
         if drop_policy not in DROP_POLICIES:
             raise ValueError(f"drop_policy must be one of {DROP_POLICIES}")
-        if merge_fn is not None and drop_policy == "impute":
+        if compress is not None and compress not in comp_lib.SCHEMES:
             raise ValueError(
-                "program merge_fn (non-uniform cuts) cannot EMA-impute "
-                "missing clients; use a barrier mode (serial/pipelined)")
-        if secure_agg:
-            if merge not in ("sum", "avg"):
-                raise ValueError(
-                    "secure aggregation needs an additively homomorphic "
-                    f"merge (sum/avg) for the pairwise masks to cancel; got "
-                    f"merge={merge!r}")
-            if merge_fn is not None:
-                raise ValueError(
-                    "secure aggregation cannot run a program merge_fn "
-                    "(non-uniform cuts, e.g. the vlm sequence concat): "
-                    "role 0 must SUM the masked cuts for the pairwise masks "
-                    "to cancel, and a concatenation exposes each masked "
-                    "segment with nothing to cancel against")
-            if mode == "nowait" or drop_policy != "fused":
-                raise ValueError(
-                    "secure aggregation requires barrier execution "
-                    "(drop_policy='fused'): a client absent from a merge "
-                    "leaves its pairwise masks uncancelled and the "
-                    "aggregate unusable — there is no dropout-recovery "
-                    f"round (got mode={mode!r}, drop_policy={drop_policy!r})")
-        if compress is not None:
-            if compress not in comp_lib.SCHEMES:
-                raise ValueError(
-                    f"unknown compression scheme {compress!r} (choose from "
-                    f"{comp_lib.SCHEMES})")
-            if secure_agg:
-                raise ValueError(
-                    "cut compression cannot compose with secure aggregation: "
-                    "additive masks do not cancel through "
-                    "quantized/sparsified values, so the merged sum would be "
-                    "garbage while the uplinks silently stop being blinded "
-                    "aggregates — run one or the other")
-            if merge_fn is not None:
-                raise ValueError(
-                    "cut compression cannot run under a program merge_fn "
-                    "(non-uniform cuts, e.g. the vlm sequence concat): the "
-                    "wire contract audits one k-per-vector frame per uplink, "
-                    "which a non-uniform concatenation does not have")
+                f"unknown compression scheme {compress!r} (choose from "
+                f"{comp_lib.SCHEMES})")
+        # every unsound feature composition rejects through the ONE
+        # compat matrix (repro.core.compat) — the rule reasons carry the
+        # full why; mode/drop_policy collapse into the nowait flag (any
+        # non-barrier execution breaks secure masks and tree partial sums)
+        compat.check(
+            "executor", secure=secure_agg, compress=compress, tree=agg_tree,
+            merge=merge, merge_fn=merge_fn,
+            nowait=mode == "nowait" or drop_policy != "fused",
+            impute=drop_policy == "impute",
+            context=f"Executor(mode={mode!r}, drop_policy={drop_policy!r})")
         if agg_tree is not None:
-            if merge not in ("sum", "avg"):
-                raise ValueError(
-                    "tree aggregation needs an additively homomorphic merge "
-                    "(sum/avg) — relays forward SUBTREE PARTIAL SUMS, and "
-                    f"max/mul/concat have no partial-sum regrouping; got "
-                    f"merge={merge!r}")
-            if merge_fn is not None:
-                raise ValueError(
-                    "tree aggregation cannot run a program merge_fn "
-                    "(non-uniform cuts, e.g. the vlm sequence concat): "
-                    "relays partial-sum uniform cut tensors, and a "
-                    "concatenation has no subtree partial sum")
-            if compress is not None:
-                raise ValueError(
-                    "tree aggregation cannot compose with cut compression: "
-                    "relays partial-sum cut tensors and codec frames "
-                    "(topk bitmaps / int8 codes) cannot be partial-summed — "
-                    "run one or the other")
-            if mode == "nowait" or drop_policy != "fused":
-                raise ValueError(
-                    "tree aggregation requires barrier execution "
-                    "(drop_policy='fused'): a client missing from a relay's "
-                    "combined frame cannot be masked out of the partial sum "
-                    "after the fact (got mode="
-                    f"{mode!r}, drop_policy={drop_policy!r})")
             if agg_tree.num_clients != transport.num_clients:
                 raise ValueError(
                     f"tree covers {agg_tree.num_clients} clients, transport "
@@ -360,6 +308,18 @@ class Executor:
         self._inflight: dict[int, _InflightStep] = {}  # insertion-ordered
         self._retired_first_t: dict[tuple[int, int], float] = {}
 
+    def _idle_error(self, phase: str, detail: str = "") -> RuntimeError:
+        """Uniform phrasing for every wait loop that drains the shared
+        pump: ``transport idle <phase>`` plus what was outstanding and
+        which steps were in flight — a hung worker names WHERE the
+        protocol stalled instead of ten hand-phrased variants."""
+        msg = f"transport idle {phase}"
+        if detail:
+            msg += f" ({detail})"
+        if self._inflight:
+            msg += f" [steps in flight: {list(self._inflight)}]"
+        return RuntimeError(msg)
+
     # -- secure-aggregation setup (one-time key-exchange round) ---------------
 
     def setup_secure(self, *, timeout_s: float = 120.0) -> Ledger:
@@ -388,8 +348,8 @@ class Executor:
         while len(pubs) < K:
             got = transport.next_response(timeout_s)
             if got is None:
-                raise RuntimeError("transport idle during key exchange "
-                                   f"({len(pubs)}/{K} public values in)")
+                raise self._idle_error("during key exchange",
+                                       f"{len(pubs)}/{K} public values in")
             k, resp = got
             if resp["op"] != "pub":
                 raise RuntimeError(
@@ -410,8 +370,8 @@ class Executor:
         while ready < K:
             got = transport.next_response(timeout_s)
             if got is None:
-                raise RuntimeError("transport idle awaiting keys_ready "
-                                   f"({ready}/{K})")
+                raise self._idle_error("awaiting keys_ready",
+                                       f"{ready}/{K} acks in")
             k, resp = got
             if resp["op"] != "keys_ready":
                 raise RuntimeError(
@@ -446,9 +406,8 @@ class Executor:
         while ready < len(relays):
             got = self.transport.next_response(timeout_s)
             if got is None:
-                raise RuntimeError("transport idle during relay "
-                                   f"configuration ({ready}/{len(relays)} "
-                                   "acks in)")
+                raise self._idle_error("during relay configuration",
+                                       f"{ready}/{len(relays)} acks in")
             k, resp = got
             if resp["op"] != "relay_ready":
                 raise RuntimeError(
@@ -692,7 +651,9 @@ class Executor:
             })
         while not all(st.done):
             if not self._pump(None):
-                raise RuntimeError("transport idle while awaiting step_done")
+                raise self._idle_error(
+                    "awaiting step_done",
+                    f"step {st.step}: {sum(st.done)}/{K} workers done")
         self._retire(st)
 
         loss = sum(losses) / M
@@ -818,8 +779,10 @@ class Executor:
             need = len(self.agg_tree.top_level)
             while have() < need:
                 if not self._pump(None):
-                    raise RuntimeError("transport idle with tree frames "
-                                       "outstanding")
+                    raise self._idle_error(
+                        "awaiting tree frames",
+                        f"step {st.step} mb {m}: {have()}/{need} top-level "
+                        "frames in")
             return [1.0] * K, None
 
         if liveness is not None:
@@ -827,13 +790,17 @@ class Executor:
             # matrix decides who made the merge
             while have() < K:
                 if not self._pump(None):
-                    raise RuntimeError("transport idle with cuts outstanding")
+                    raise self._idle_error(
+                        "awaiting cuts",
+                        f"step {st.step} mb {m}: {have()}/{K} in")
             return [float(x) for x in liveness[m]], None
 
         if self.mode != "nowait":
             while have() < K:
                 if not self._pump(None):
-                    raise RuntimeError("transport idle with cuts outstanding")
+                    raise self._idle_error(
+                        "awaiting cuts",
+                        f"step {st.step} mb {m}: {have()}/{K} in")
             return [1.0] * K, None
 
         # real no-wait: grace window after the first arrival
@@ -848,7 +815,9 @@ class Executor:
             if d is None:
                 # bootstrap barrier: no estimate yet, wait for everyone
                 if not self._pump(None):
-                    raise RuntimeError("transport idle with cuts outstanding")
+                    raise self._idle_error(
+                        "awaiting cuts at the bootstrap barrier",
+                        f"step {st.step} mb {m}: {have()}/{K} in")
                 continue
             deadline_used = d
             remaining = (st.first_t[m] + d) - time.monotonic()

@@ -34,12 +34,18 @@ class ServeDriver:
     :class:`~repro.serve.split_serve.SplitLMServer`, which drives this."""
 
     def __init__(self, transport, *, merge: str, label_holder: int = 0,
-                 ledger: Optional[Ledger] = None, timeout_s: float = 120.0):
+                 ledger: Optional[Ledger] = None, timeout_s: float = 120.0,
+                 secure: bool = False, compress: Optional[str] = None,
+                 tree=None):
         self.transport = transport
         self.num_clients = transport.num_clients
         self.merge = merge
+        # training-path overlays (secure/compressed/tree wires) are passed
+        # through to serve_schedule, whose compat gate rejects them — the
+        # schedule layer is where a masked serving wire becomes unbuildable
         self.schedule: ServeSchedule = serve_schedule(
-            self.num_clients, label_holder)
+            self.num_clients, label_holder, secure=secure,
+            compress=compress, tree=tree)
         self.ledger = ledger if ledger is not None else Ledger()
         self.timeout_s = timeout_s
         # in-flight response buffers, filled by the shared pump

@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core import compat
 from repro.core.protocol import Ledger
 from repro.models import split_program
 from repro.runtime.serve_driver import ServeDriver
@@ -167,12 +168,12 @@ class SplitLMServer:
         if cfg.vertical is None:
             raise ValueError(f"{cfg.name}: split serving needs a vertical "
                              "config")
-        if cfg.vertical.compression is not None or \
-                cfg.vertical.secure_aggregation:
-            raise ValueError(
-                f"{cfg.name}: split serving ships raw cut frames — cut "
-                "compression and secure aggregation are training-path "
-                "features and do not compose with serving")
+        # training-path overlays reject through the compat matrix
+        # (serve-secure / serve-compress); the schedule layer repeats the
+        # check when the driver builds its serve_schedule below
+        compat.check("serve", serve=True,
+                     secure=cfg.vertical.secure_aggregation,
+                     compress=cfg.vertical.compression, context=cfg.name)
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.cfg = cfg
@@ -191,7 +192,9 @@ class SplitLMServer:
         self._fns = program.server_serve_fns()  # raises for non-dense
         self.driver = ServeDriver(transport, merge=cfg.vertical.merge,
                                   label_holder=label_holder, ledger=ledger,
-                                  timeout_s=timeout_s)
+                                  timeout_s=timeout_s,
+                                  secure=cfg.vertical.secure_aggregation,
+                                  compress=cfg.vertical.compression)
         self.cut_cache = CutCache(cut_cache_bytes)
 
         # stacked decode slots: one fixed-shape compiled step decodes all

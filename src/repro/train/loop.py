@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint.msgpack_ckpt import save_checkpoint
 from repro.configs.base import ArchConfig
+from repro.core import compat
 from repro.core import compression as comp_lib
 from repro.models import backbone
 from repro.optim import AdamW
@@ -296,53 +297,17 @@ def train_split(
     program = get_program(cfg)
     secure = cfg.vertical.secure_aggregation
     compress = cfg.vertical.compression
-    if secure and compress is not None:
-        # fail actionably BEFORE spawning workers: quantized/sparsified
-        # values break the additive mask cancellation, so the run would be
-        # neither private nor correct
-        raise ValueError(
-            "compression and secure_aggregation cannot compose: additive "
-            "masks do not cancel through quantized/sparsified values.  "
-            "Run one or the other.")
-    if secure:
-        # fail actionably BEFORE spawning workers — a silently unmasked run
-        # would be a privacy hole, not a degraded mode
-        if runtime == "nowait":
-            raise ValueError(
-                "secure_aggregation=True cannot train in no-wait mode: a "
-                "deadline-dropped client's pairwise masks do not cancel and "
-                "the merged aggregate is unusable (no dropout-recovery "
-                "round).  Use --runtime serial/pipelined, or disable "
-                "secure aggregation.")
-        if program.merge_fn is not None:
-            raise ValueError(
-                f"secure_aggregation=True is unsupported for the "
-                f"{cfg.family!r} program's non-uniform merge_fn (sequence "
-                "concat): role 0 must SUM masked cuts for the pairwise "
-                "masks to cancel.  Disable secure aggregation for this "
-                "family.")
+    # fail actionably BEFORE spawning workers: every unsound composition
+    # (a silently unmasked secure run would be a privacy hole; a codec
+    # frame cannot be partial-summed; ...) rejects through the ONE compat
+    # matrix instead of surfacing as a mid-run Executor/worker error
+    compat.check(
+        "train", secure=secure, compress=compress, tree=agg_tree_fanout,
+        nowait=runtime == "nowait", merge_fn=program.merge_fn,
+        merge=program.merge, context=f"train_split({cfg.name})")
     agg_tree = None
     if agg_tree_fanout is not None:
-        # fail actionably BEFORE spawning workers: every incompatibility
-        # below would otherwise surface as a mid-run Executor/worker error
         from repro.runtime.topology import AggTree
-        if compress is not None:
-            raise ValueError(
-                "agg_tree_fanout cannot compose with cut compression: a "
-                "relay cannot partial-sum sparse/quantized frames without "
-                "decoding them, which breaks each stream's error-feedback "
-                "state.  Run one or the other.")
-        if program.merge_fn is not None or program.merge not in ("sum", "avg"):
-            raise ValueError(
-                f"agg_tree_fanout requires an additive merge: relays "
-                f"partial-sum subtree cuts, which is only the true merge "
-                f"for 'sum'/'avg', not {cfg.family!r}'s "
-                f"{'merge_fn' if program.merge_fn is not None else repr(program.merge)}.")
-        if runtime == "nowait":
-            raise ValueError(
-                "agg_tree_fanout cannot run in no-wait mode: a combined "
-                "tree frame has no per-client arrival to deadline or "
-                "EMA-impute.  Use --runtime serial/pipelined.")
         agg_tree = AggTree(num_clients=cfg.vertical.num_clients,
                            fanout=agg_tree_fanout)
     params = backbone.init_params(cfg, jax.random.PRNGKey(seed))

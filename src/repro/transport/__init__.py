@@ -80,7 +80,14 @@ per-step grad sums and pending features), so a cross-step driver
 (``runtime.pipeline.StepPipeline``) can interleave step t+1 forwards with
 step t backwards: at window W > 1 tower params train on delayed gradients,
 one optimizer update behind the submitted forward.
+
+The op table above is DECLARED in :mod:`repro.transport.ops`
+(``WORKER_OPS`` / ``RESPONSE_OPS``) — ``TowerWorker.handle`` dispatches
+from it, and ``python -m repro.analysis`` verifies this docstring, the
+registry, the worker's handlers, and every driver's submitted op literals
+against each other (rules O001-O003/D001).
 """
+from repro.transport import ops
 from repro.transport.base import SimTransport, TowerWorker, Transport
 from repro.transport.builders import (build_lm_worker, build_mlp_worker,
                                       build_split_worker)
@@ -92,6 +99,7 @@ TRANSPORTS = ("sim", "inproc", "multiproc")
 
 __all__ = [
     "TRANSPORTS",
+    "ops",
     "Transport",
     "TowerWorker",
     "SimTransport",

@@ -15,8 +15,10 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import compat
 from repro.core import compression as comp_lib
 from repro.core import secure_agg
+from repro.transport import ops as ops_registry
 
 
 class Transport:
@@ -159,36 +161,32 @@ class TowerWorker:
     # -- ops ----------------------------------------------------------------
 
     def handle(self, request: dict) -> Optional[dict]:
+        """Dispatch one request through the declarative op table
+        (:data:`repro.transport.ops.WORKER_OPS`) — the registry IS the
+        set of verbs this worker serves."""
         op = request["op"]
-        if op == "forward":
-            return self._forward(request)
-        if op == "backward":
-            return self._backward(request)
-        if op == "finish_step":
-            return self._finish_step(request)
-        if op == "key_exchange":
-            return self._key_exchange(request)
-        if op == "configure_relay":
-            return self._configure_relay(request)
-        if op == "aggregate":
-            return self._relay_accumulate(
-                request["step"], request["mb"], request["child"],
-                jnp.asarray(request["frame"]))
-        if op == "serve_prefill":
-            return self._serve_prefill(request)
-        if op == "serve_decode":
-            return self._serve_decode(request)
-        if op == "serve_end":
-            # fire-and-forget session teardown: nothing to reply, the
-            # driver retires the request without a barrier
-            self._serve_sessions.pop(request["request"], None)
-            return None
-        if op == "get_params":
-            return {"op": "params", "client": self.client_id,
-                    "params": self.params}
-        if op == "shutdown":
-            return {"op": "bye", "client": self.client_id}
-        raise ValueError(f"unknown op {op!r}")
+        spec = ops_registry.WORKER_OPS.get(op)
+        if spec is None:
+            raise ValueError(f"unknown op {op!r}")
+        return getattr(self, spec.handler)(request)
+
+    def _aggregate(self, request: dict) -> Optional[dict]:
+        return self._relay_accumulate(
+            request["step"], request["mb"], request["child"],
+            jnp.asarray(request["frame"]))
+
+    def _serve_end(self, request: dict) -> None:
+        # fire-and-forget session teardown: nothing to reply, the driver
+        # retires the request without a barrier
+        self._serve_sessions.pop(request["request"], None)
+        return None
+
+    def _get_params(self, request: dict) -> dict:
+        return {"op": "params", "client": self.client_id,
+                "params": self.params}
+
+    def _shutdown(self, request: dict) -> dict:
+        return {"op": "bye", "client": self.client_id}
 
     # -- serving ops --------------------------------------------------------
 
@@ -198,12 +196,11 @@ class TowerWorker:
                 f"client {self.client_id}: no serve_fns configured — split "
                 "serving needs the program's tower serving bundle "
                 "(SplitProgram.tower_serve_fns; dense family only)")
-        if self.compress is not None or self._secure is not None:
-            raise ValueError(
-                f"client {self.client_id}: serving frames are raw cut "
-                "tensors — cut compression and secure aggregation are "
-                "training-path features and do not compose with the "
-                "serving ops")
+        # the worker's own guard (it must not trust the driver): serving
+        # frames are raw cut tensors
+        compat.check("worker", serve=True, secure=self._secure is not None,
+                     compress=self.compress,
+                     context=f"client {self.client_id}")
 
     def _serve_prefill(self, request: dict) -> dict:
         """One-time per-request tower prefill: embed the prompt through the
@@ -299,11 +296,10 @@ class TowerWorker:
                 "mb": mb, "cut": cut}
 
     def _configure_relay(self, request: dict) -> dict:
-        if self.compress is not None:
-            raise ValueError(
-                f"client {self.client_id}: compression ({self.compress}) "
-                "cannot compose with tree aggregation — relays partial-sum "
-                "cut tensors and codec frames cannot be partial-summed")
+        # the worker's own guard, mirroring the Executor's constructor-time
+        # tree+compress rejection
+        compat.check("worker", tree=True, compress=self.compress,
+                     context=f"client {self.client_id}")
         self._relay_children = tuple(int(c) for c in request["children"])
         return {"op": "relay_ready", "client": self.client_id}
 
@@ -327,11 +323,11 @@ class TowerWorker:
                 "mb": mb, "cut": total}
 
     def _key_exchange(self, request: dict) -> dict:
-        if self.compress is not None:
-            raise ValueError(
-                f"client {self.client_id}: compression ({self.compress}) "
-                "cannot compose with secure aggregation — additive masks do "
-                "not cancel through quantized/sparsified values")
+        # the privacy principal's own guard: a compressing worker must not
+        # join a key exchange, whatever the driver says (checked BEFORE the
+        # phase is read, so a malformed request still rejects loudly)
+        compat.check("worker", secure=True, compress=self.compress,
+                     context=f"client {self.client_id}")
         phase = request["phase"]
         if phase == "pub":
             self._dh_secret, pub = secure_agg.dh_keypair()

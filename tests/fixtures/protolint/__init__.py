@@ -1,0 +1,106 @@
+"""Seeded protocol-conformance violations, one per protolint rule class.
+
+Each entry is an ``overrides`` map (repo-relative path -> source text)
+that :func:`repro.analysis.run` analyzes INSTEAD of the on-disk file, so
+the violations never touch the repo.  Two flavours:
+
+* brand-new broken fixture modules (W001/O001) planted at paths inside
+  the linted tree;
+* targeted MUTATIONS of real sources (everything else) — the linter must
+  notice when a handler is renamed, a compat check is deleted, a kind
+  stops being produced, a pump thread grows a side-channel field, etc.
+
+``seeded(rule)`` returns the overrides for one rule class; tests assert
+the named rule fires on each and that the pristine repo stays clean.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[3]
+
+_COSTS = "src/repro/core/costs.py"
+_PROTOCOL = "src/repro/core/protocol.py"
+_BASE = "src/repro/transport/base.py"
+_EXECUTOR = "src/repro/runtime/executor.py"
+_INPROC = "src/repro/transport/inproc.py"
+_TREE = "src/repro/transport/tree.py"
+
+#: a schedule helper inventing a wire kind the registry never heard of
+W001_UNKNOWN_KIND = '''\
+"""Fixture: schedules an unregistered wire kind (W001)."""
+
+
+def warp_spec():
+    cut_kind = "warp_cut"  # not in protocol.WIRE_KINDS
+    return cut_kind
+'''
+
+#: a driver submitting a verb no worker serves
+O001_UNKNOWN_OP = '''\
+"""Fixture: submits an op missing from transport.ops (O001)."""
+
+
+def ping(transport):
+    transport.submit(0, {"op": "warp"})
+'''
+
+
+def _mutate(rel: str, old: str, new: str) -> dict:
+    text = (REPO / rel).read_text()
+    assert old in text, f"mutation anchor {old!r} vanished from {rel}"
+    return {rel: text.replace(old, new)}
+
+
+def _w004_overrides(kind: str = "tree_jac") -> dict:
+    """Scrub one registered kind from every tests/ file that names it —
+    the linter must notice the kind lost its last test reference."""
+    overrides = {}
+    for p in sorted((REPO / "tests").rglob("*.py")):
+        text = p.read_text()
+        if kind in text:
+            rel = p.relative_to(REPO).as_posix()
+            overrides[rel] = text.replace(kind, "scrubbed_kind")
+    assert overrides, f"no tests reference {kind!r}?"
+    return overrides
+
+
+def seeded(rule: str) -> dict:
+    """Overrides seeding exactly the named rule class's violation."""
+    if rule == "W001":
+        return {"src/repro/runtime/_fixture_w001.py": W001_UNKNOWN_KIND}
+    if rule == "W002":
+        # registered kinds 'cut'/'jac' price through costs.cut_bytes;
+        # renaming the byte model must be caught
+        return _mutate(_COSTS, "def cut_bytes(", "def cut_bytes_gone(")
+    if rule == "W003":
+        # the schedule stops producing a registered kind (rename the
+        # literal everywhere in protocol.py — registry stays live)
+        return _mutate(_PROTOCOL, '"masked_cut"', '"masked_cutz"')
+    if rule == "W004":
+        return _w004_overrides()
+    if rule == "O001":
+        return {"src/repro/runtime/_fixture_o001.py": O001_UNKNOWN_OP}
+    if rule == "O002":
+        # the registered handler for 'forward' no longer exists
+        return _mutate(_BASE, "def _forward(", "def _forward_gone(")
+    if rule == "O003":
+        # the only driver that ships configure_relay stops doing so
+        return _mutate(_EXECUTOR,
+                       '"op": "configure_relay"', '"op": "forward"')
+    if rule == "C001":
+        # delete the executor-layer compat gate (rename the call)
+        return _mutate(_EXECUTOR, "compat.check(", "compat.check_disabled(")
+    if rule == "D001":
+        return {"docs/compat_matrix.md": "# stale matrix\n"}
+    if rule == "T001":
+        # the inproc worker thread grows a non-queue side channel
+        return _mutate(
+            _INPROC,
+            "                self._responses.put((client, resp))",
+            "                self._responses.put((client, resp))\n"
+            "                self.delivered = resp")
+    if rule == "T001-thread":
+        # a thread is spun up on an undeclared entrypoint
+        return _mutate(_TREE, "target=self._pump", "target=self._sneak")
+    raise KeyError(rule)

@@ -1,0 +1,184 @@
+"""Protolint: the conformance linter itself, the registries it audits,
+and the runtime behaviours the registries drive.
+
+Three layers of assertion:
+
+* the pristine repo is CLEAN (and the CLI agrees, in-process and as a
+  subprocess);
+* every seeded fixture/mutation class in tests/fixtures/protolint is
+  CAUGHT, with the right rule id — deleting a compat check, renaming a
+  handler, scheduling an unknown kind, or growing a thread side-channel
+  must each flip the exit code;
+* the registries are live at runtime: serve_schedule rejects through the
+  compat matrix, MessageSpec rejects unregistered kinds, the head_jac
+  leg reconciles against its registered costs.* byte model, and the
+  executor's idle errors name the waiting phase and in-flight steps.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from fixtures.protolint import REPO, seeded
+from repro.analysis import run
+from repro.analysis.report import format_findings
+from repro.core import compat, costs
+from repro.core.protocol import WIRE_KINDS, Ledger, MessageSpec, \
+    serve_schedule, step_schedule
+from repro.runtime.executor import Executor
+from repro.transport.ops import RESPONSE_OPS, WORKER_OPS
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+# -- the repo conforms ------------------------------------------------------
+
+def test_repo_is_clean():
+    findings = run(REPO)
+    assert findings == [], format_findings(findings)
+
+
+def test_cli_strict_subprocess():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--strict",
+         "--root", str(REPO)],
+        capture_output=True, text=True, timeout=120,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "protolint: clean" in proc.stdout
+
+
+# -- every seeded violation class is caught ---------------------------------
+
+@pytest.mark.parametrize("rule", [
+    "W001", "W002", "W003", "W004",
+    "O001", "O002", "O003", "C001", "D001", "T001",
+])
+def test_seeded_violation_caught(rule):
+    findings = run(REPO, overrides=seeded(rule))
+    assert rule in _rules(findings), \
+        f"seeded {rule} violation not caught:\n{format_findings(findings)}"
+
+
+def test_undeclared_thread_target_caught():
+    findings = run(REPO, overrides=seeded("T001-thread"))
+    assert any(f.rule == "T001" and "Thread target" in f.message
+               for f in findings), format_findings(findings)
+
+
+def test_mutation_deleting_compat_check_fails_closed():
+    # the acceptance mutation: remove ONE layer's compat gate and the
+    # linter must name every rule that just lost its enforcement there
+    findings = run(REPO, overrides=seeded("C001"))
+    hit = [f for f in findings if f.rule == "C001"]
+    executor_rules = {r.key for r in compat.RULES if "executor" in r.layers}
+    named = {r.key for r in compat.RULES
+             for f in hit if f"'{r.key}'" in f.message}
+    assert executor_rules <= named, format_findings(findings)
+
+
+def test_mutation_renaming_kind_literal_fails_closed():
+    # the other acceptance mutation: rename one kind literal in
+    # protocol.py — the registry keeps the kind (W003: nothing produces
+    # it) and the new spelling is unregistered (W001)
+    findings = run(REPO, overrides=seeded("W003"))
+    assert {"W001", "W003"} <= _rules(findings), format_findings(findings)
+
+
+def test_fixtures_never_touch_disk():
+    # analyzing a mutated executor must not change the real file
+    before = (REPO / "src/repro/runtime/executor.py").read_text()
+    run(REPO, overrides=seeded("C001"))
+    assert (REPO / "src/repro/runtime/executor.py").read_text() == before
+
+
+# -- the registries are live at runtime -------------------------------------
+
+def test_message_spec_rejects_unregistered_kind():
+    with pytest.raises(ValueError, match="unregistered wire kind"):
+        MessageSpec("role0", "client_0", "warp_payload", "warp_cut")
+
+
+def test_serve_schedule_rejects_training_features_loudly():
+    with pytest.raises(compat.CompatError,
+                       match="not compose with the serving schedule"):
+        serve_schedule(4, secure=True)
+    with pytest.raises(compat.CompatError,
+                       match="not compose with the serving schedule"):
+        serve_schedule(4, compress="topk")
+    with pytest.raises(compat.CompatError,
+                       match="no serving schedule"):
+        serve_schedule(4, tree=2)
+    # and the training schedule still rejects its own compositions
+    with pytest.raises(compat.CompatError, match="cannot compose"):
+        step_schedule(4, secure=True, compress="topk")
+
+
+def test_head_jac_reconciles_against_registered_cost_model():
+    # head_jac is the role3 -> role0 loss-jacobian uplink; its registry
+    # entry prices it with costs.head_exchange_bytes, and the ledger's
+    # audited bytes must match that model exactly
+    spec = WIRE_KINDS["head_jac"]
+    assert spec.direction == "up" and spec.cost_model == "head_exchange_bytes"
+    sched = step_schedule(num_clients=3)
+    assert sched.head_jac.kind == "head_jac"
+    batch, num_classes = 8, 10
+    ledger = Ledger()
+    ledger.record_spec(sched.head_jac,
+                       np.zeros((batch, num_classes), np.float32))
+    assert ledger.sent_by("role3") == \
+        costs.head_exchange_bytes(batch, num_classes)
+
+
+def test_every_wire_kind_has_callable_cost_model():
+    for kind, spec in WIRE_KINDS.items():
+        assert callable(getattr(costs, spec.cost_model)), kind
+
+
+def test_worker_op_registry_drives_dispatch():
+    from repro.transport.base import TowerWorker
+    for op, spec in WORKER_OPS.items():
+        assert hasattr(TowerWorker, spec.handler), op
+        assert set(spec.responses) <= set(RESPONSE_OPS), op
+
+
+def test_compat_matrix_doc_in_sync():
+    committed = (REPO / "docs/compat_matrix.md").read_text()
+    assert committed == compat.render_markdown()
+
+
+# -- bench artifact schema gate ---------------------------------------------
+
+def test_bench_check_validates_against_committed_schema(tmp_path):
+    pytest.importorskip("jsonschema")
+    import json
+
+    from benchmarks.run import _check_bench_json
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps({"split_exec": [{
+        "family": "dense", "arch": "smollm-360m",
+        "step_time_ms": 12.5, "cut_bytes_per_client": 4096}]}))
+    _check_bench_json(str(good))
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"split_exec": [{"family": "dense"}]}))
+    with pytest.raises(SystemExit, match="violates bench_schema.json"):
+        _check_bench_json(str(bad))
+    with pytest.raises(SystemExit, match="does not exist"):
+        _check_bench_json(str(tmp_path / "missing.json"))
+
+
+# -- executor idle errors name phase and in-flight steps --------------------
+
+def test_idle_error_names_phase_and_inflight():
+    ex = object.__new__(Executor)
+    ex._inflight = {}
+    err = ex._idle_error("awaiting cuts", "step 4 mb 1: 2/3 in")
+    assert str(err) == "transport idle awaiting cuts (step 4 mb 1: 2/3 in)"
+    ex._inflight = {4: object(), 5: object()}
+    err = ex._idle_error("awaiting step_done")
+    assert str(err) == \
+        "transport idle awaiting step_done [steps in flight: [4, 5]]"
